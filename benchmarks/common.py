@@ -1,0 +1,96 @@
+"""Shared benchmark scaffolding: the six architectures of paper §6 Case I
+(Clos, c-Through, Jupiter, Mordia, RotorNet, Opera) + UCMP-on-RotorNet,
+built through the OpenOptics user API exactly as Fig. 5 does."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (FabricConfig, OpenOpticsNet, Workload, bvn,
+                        clos_routing, direct, edmonds, flow_fcts, hoho,
+                        jupiter, opera, round_robin, synthesize, ucmp,
+                        uniform_mesh, vlb, wcmp)
+
+LINK_GBPS = 100.0
+
+
+def slice_bytes(slice_us: float, gbps: float = LINK_GBPS) -> int:
+    return int(gbps / 8 * 1e3 * slice_us)
+
+
+@dataclasses.dataclass
+class ArchSetup:
+    name: str
+    net: OpenOpticsNet
+    slice_us: float
+
+
+def build_arch(name: str, n_nodes: int, slice_us: float = 10.0,
+               tm: np.ndarray | None = None, fabric_over: dict | None = None,
+               elephant_bytes: int = 1 << 20) -> ArchSetup:
+    """Instantiate one of the paper's six architectures (+ RotorNet-UCMP)."""
+    sb = slice_bytes(slice_us)
+    fab = dict(slice_bytes=sb, cc_detect=True)
+    if tm is None:
+        tm = np.ones((n_nodes, n_nodes)) - np.eye(n_nodes)
+
+    if name == "clos":
+        fab.update(slice_bytes=0, elec_bytes=sb)
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=1,
+                                 slice_us=slice_us, fabric=fab))
+        net.deploy_topo(round_robin(n_nodes, 1, slice_us=slice_us))
+        net.deploy_routing(clos_routing(n_nodes))
+    elif name == "c-through":
+        # hybrid: elephants over Edmonds-matched circuits (flow pausing),
+        # mice over the rate-limited electrical fabric (paper: 10 Gbps)
+        fab.update(elec_bytes=slice_bytes(slice_us, 10.0), flow_pausing=True)
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=1,
+                                 slice_us=slice_us, fabric=fab))
+        net.deploy_topo(edmonds(tm, slice_us=slice_us))
+        net.deploy_routing(clos_routing(n_nodes))
+    elif name == "jupiter":
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=4,
+                                 slice_us=slice_us, fabric=fab))
+        sched = jupiter(tm, n_nodes=n_nodes, n_uplinks=4, max_moves=16,
+                        slice_us=slice_us)
+        net.deploy_topo(sched)
+        net.deploy_routing(wcmp(sched))
+    elif name == "mordia":
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=1,
+                                 slice_us=slice_us, fabric=fab))
+        sched = bvn(tm, max_perms=2 * n_nodes, slice_us=slice_us)
+        net.deploy_topo(sched)
+        net.deploy_routing(direct(sched))
+    elif name in ("rotornet", "rotornet-ucmp", "rotornet-hoho", "rotornet-direct"):
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=1,
+                                 slice_us=slice_us, fabric=fab))
+        sched = round_robin(n_nodes, 1, slice_us=slice_us)
+        net.deploy_topo(sched)
+        alg = {"rotornet": vlb, "rotornet-ucmp": ucmp, "rotornet-hoho": hoho,
+               "rotornet-direct": direct}[name]
+        net.deploy_routing(alg(sched))
+    elif name == "opera":
+        net = OpenOpticsNet(dict(node="rack", node_num=n_nodes, uplink=2,
+                                 slice_us=slice_us, fabric=fab))
+        sched = round_robin(n_nodes, 2, slice_us=slice_us)
+        net.deploy_topo(sched)
+        net.deploy_routing(opera(sched))
+    else:
+        raise ValueError(name)
+    if fabric_over:
+        net.fabric_cfg = dataclasses.replace(net.fabric_cfg, **fabric_over)
+    return ArchSetup(name, net, slice_us)
+
+
+def traffic_tm(wl: Workload, n_nodes: int) -> np.ndarray:
+    tm = np.zeros((n_nodes, n_nodes))
+    np.add.at(tm, (wl.src, wl.dst), wl.size.astype(np.float64))
+    return tm
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6

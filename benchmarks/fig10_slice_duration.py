@@ -1,0 +1,31 @@
+"""Paper Fig. 10: mice-flow FCT sensitivity to the OCS time-slice duration,
+VLB vs UCMP on RotorNet (Case III: choice of optical hardware)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import flow_fcts, round_robin, synthesize, ucmp, vlb
+from repro.core.fabric import FabricConfig, FabricTables, simulate
+from .common import slice_bytes, timed
+
+N = 8
+DURATIONS_US = [2.0, 20.0, 100.0, 200.0]
+
+
+def run(quick: bool = False):
+    rows = []
+    durations = DURATIONS_US[:2] if quick else DURATIONS_US
+    for slice_us in durations:
+        sb = max(slice_bytes(slice_us), 1500)
+        sched = round_robin(N, 1, slice_us=slice_us)
+        wl = synthesize("kvstore", N, 200, slice_bytes=sb, load=0.15,
+                        max_packets=3000, elephant_bytes=1 << 30, seed=2)
+        for alg_name, alg in (("vlb", vlb), ("ucmp", ucmp)):
+            tables = FabricTables.build(sched, alg(sched))
+            cfg = FabricConfig(slice_bytes=sb, hops_per_slice=1)
+            res, us = timed(simulate, tables, wl, cfg, 500)
+            fct = flow_fcts(wl, res.t_deliver, slice_us)
+            p99 = float(np.percentile(fct, 99)) if len(fct) else float("nan")
+            rows.append((f"fig10_fct_p99[{alg_name},slice={slice_us}us]",
+                         us, f"{p99:.1f}us"))
+    return rows

@@ -1,0 +1,19 @@
+"""Paper Fig. 12 + Appendix A: queue-occupancy-estimation error vs update
+interval (50 ns -> sub-half-MTU error)."""
+from __future__ import annotations
+
+from repro.core import simulate_eqo
+from .common import timed
+
+INTERVALS_NS = [25, 50, 100, 200, 400, 800]
+
+
+def run(quick: bool = False):
+    rows = []
+    intervals = INTERVALS_NS[:3] if quick else INTERVALS_NS
+    total = 50_000 if quick else 200_000
+    for iv in intervals:
+        out, us = timed(simulate_eqo, iv, total)
+        rows.append((f"fig12_eqo_err_max[{iv}ns]", us,
+                     f"{out['err_max_bytes']:.0f}B"))
+    return rows

@@ -1,0 +1,56 @@
+"""Paper Fig. 8: mice/elephant FCTs across the six architectures (+ UCMP on
+RotorNet). Testbed analogue: 8 ToRs, Memcached-like mice + bulk elephants."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import flow_fcts, synthesize
+from .common import build_arch, slice_bytes, timed, traffic_tm
+
+ARCHS = ["clos", "c-through", "jupiter", "mordia", "rotornet", "opera",
+         "rotornet-ucmp"]
+N, SLICE_US, SLICES = 8, 10.0, 700
+
+
+def _workload(seed=0):
+    sb = slice_bytes(SLICE_US)
+    mice = synthesize("kvstore", N, 400, slice_bytes=sb, load=0.1,
+                      max_packets=4000, elephant_bytes=1 << 30, seed=seed)
+    eleph = synthesize("hadoop", N, 400, slice_bytes=sb, load=0.25,
+                       max_packets=6000, elephant_bytes=0, seed=seed + 1)
+    # merge with distinct flow-id spaces
+    import dataclasses
+    from repro.core import Workload
+    off = mice.num_flows
+    return Workload(
+        src=np.concatenate([mice.src, eleph.src]),
+        dst=np.concatenate([mice.dst, eleph.dst]),
+        size=np.concatenate([mice.size, eleph.size]),
+        t_inject=np.concatenate([mice.t_inject, eleph.t_inject]),
+        flow=np.concatenate([mice.flow, eleph.flow + off]),
+        seq=np.concatenate([mice.seq, eleph.seq]),
+        is_eleph=np.concatenate([np.zeros(mice.num_packets, bool),
+                                 np.ones(eleph.num_packets, bool)]),
+    ), off
+
+
+def run(quick: bool = False):
+    rows = []
+    wl, n_mice_flows = _workload()
+    tm = traffic_tm(wl, N)
+    F = wl.num_flows
+    mice_mask = np.zeros(F, bool)
+    mice_mask[:n_mice_flows] = True
+    archs = ARCHS[:3] + ["rotornet"] if quick else ARCHS
+    for name in archs:
+        setup = build_arch(name, N, SLICE_US, tm=tm)
+        res, us = timed(setup.net.run, wl, SLICES)
+        fct_m = flow_fcts(wl, res.t_deliver, SLICE_US, only=mice_mask)
+        fct_e = flow_fcts(wl, res.t_deliver, SLICE_US, only=~mice_mask)
+        med_m = float(np.median(fct_m)) if len(fct_m) else float("nan")
+        p99_m = float(np.percentile(fct_m, 99)) if len(fct_m) else float("nan")
+        med_e = float(np.median(fct_e)) if len(fct_e) else float("nan")
+        rows.append((f"fig8_mice_fct_med[{name}]", us, f"{med_m:.1f}us"))
+        rows.append((f"fig8_mice_fct_p99[{name}]", us, f"{p99_m:.1f}us"))
+        rows.append((f"fig8_eleph_fct_med[{name}]", us, f"{med_e:.1f}us"))
+    return rows

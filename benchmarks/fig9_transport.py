@@ -1,0 +1,56 @@
+"""Paper Fig. 9: long-flow throughput + packet reordering — Clos vs RotorNet
+direct-circuit vs VLB vs hybrid (electrical + optical)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import FabricConfig, Workload, round_robin, direct, vlb
+from repro.core.fabric import FabricTables, simulate
+from repro.core.net import clos_routing
+from .common import build_arch, slice_bytes, timed
+
+N, SLICE_US, SLICES = 8, 10.0, 600
+
+
+def _long_flows(sb, pairs=((0, 4), (1, 5), (2, 6))):
+    """iperf-like: a few long paced flows."""
+    cells_per_slice = max(1, sb // 1500)
+    src, dst, size, t, flow, seq = [], [], [], [], [], []
+    for f, (s, d) in enumerate(pairs):
+        for i in range(1500):
+            src.append(s); dst.append(d); size.append(1500)
+            t.append(i // cells_per_slice); flow.append(f); seq.append(i)
+    i32 = lambda a: np.asarray(a, np.int32)
+    return Workload(i32(src), i32(dst), i32(size), i32(t), i32(flow), i32(seq),
+                    np.ones(len(src), bool))
+
+
+def run(quick: bool = False):
+    sb = slice_bytes(SLICE_US)
+    wl = _long_flows(sb)
+    total = wl.size.sum()
+    rows = []
+    sched = round_robin(N, 1, slice_us=SLICE_US)
+    cases = {
+        "clos": (FabricConfig(slice_bytes=0, elec_bytes=sb), clos_routing(N)),
+        "rotor-direct": (FabricConfig(slice_bytes=sb), direct(sched)),
+        "rotor-vlb": (FabricConfig(slice_bytes=sb), vlb(sched)),
+        # hybrid: optical 100G + electrical 10G, VLB over optical
+        "hybrid": (FabricConfig(slice_bytes=sb,
+                                elec_bytes=slice_bytes(SLICE_US, 10.0)),
+                   vlb(sched)),
+    }
+    if quick:
+        cases = {k: cases[k] for k in ("clos", "rotor-vlb")}
+    for name, (cfg, routing) in cases.items():
+        tables = FabricTables.build(sched, routing)
+        res, us = timed(simulate, tables, wl, cfg, SLICES)
+        done = res.t_deliver >= 0
+        dur_slices = max(int(res.t_deliver.max()) + 1, 1)
+        n_flows = wl.num_flows
+        gbps = (wl.size[done].sum() * 8) / (dur_slices * SLICE_US * 1e3) / n_flows
+        rows.append((f"fig9_goodput_per_flow[{name}]", us, f"{gbps:.1f}Gbps"))
+        rows.append((f"fig9_reorder[{name}]", us, int(res.reorder_cnt)))
+    return rows

@@ -1,0 +1,75 @@
+"""Kernel + dataplane micro-benchmarks.
+
+Interpret-mode Pallas timings measure Python dispatch, not TPU performance —
+TPU projections come from the roofline analysis. What IS meaningful on CPU:
+the jnp-oracle dataplane throughput (the fabric simulator's hot ops) and the
+simulator's packets x slices rate.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.core import FabricConfig, FabricTables, round_robin, synthesize, ucmp
+from repro.core.fabric import simulate
+from .common import timed
+
+
+def _bench(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # time-flow lookup oracle (fabric's per-slice hot op) at 108-ToR scale
+    n, k, P = 108, 4, 1 << 15
+    tbl_n = jnp.asarray(rng.integers(-1, n, (n, n, k)), jnp.int32)
+    tbl_d = jnp.asarray(rng.integers(0, 8, (n, n, k)), jnp.int32)
+    node = jnp.asarray(rng.integers(0, n, P), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, P), jnp.int32)
+    h = jnp.asarray(rng.integers(0, 2**31, P), jnp.uint32)
+    f = jax.jit(lambda *a: ops.time_flow_lookup(*a, impl="ref"))
+    us = _bench(f, tbl_n, tbl_d, node, dst, h)
+    rows.append(("kern_tfl_ref_32kpkt", us, f"{P/us:.0f}pkt/us"))
+
+    # flash attention oracle vs naive jnp (CPU walltime, small shape)
+    B, Hq, Hkv, L, hd = 1, 4, 2, 512, 64
+    q = jnp.asarray(rng.normal(size=(B*Hq, L, hd)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(B*Hkv, L, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B*Hkv, L, hd)), jnp.float32)
+    fr = jax.jit(lambda *a: ops.flash_attention(*a, n_q_heads=Hq,
+                                                n_kv_heads=Hkv, impl="ref"))
+    rows.append(("kern_attn_ref_512", _bench(fr, q, kk, v), "oracle"))
+    if not quick:
+        us_p = _bench(lambda *a: ops.flash_attention(
+            *a, n_q_heads=Hq, n_kv_heads=Hkv), q, kk, v, iters=2)
+        rows.append(("kern_attn_pallas_interp_512", us_p,
+                     "interpret-mode (dispatch cost only)"))
+
+    # fabric simulator throughput
+    n2 = 16
+    sched = round_robin(n2, 1)
+    wl = synthesize("rpc", n2, 60, slice_bytes=10_000, load=0.3,
+                    max_packets=4000, seed=1)
+    tables = FabricTables.build(sched, ucmp(sched))
+    cfg = FabricConfig(slice_bytes=10_000)
+    S = 150
+    simulate(tables, wl, cfg, S)  # warm compile
+    t0 = time.time()
+    simulate(tables, wl, cfg, S)
+    dt = time.time() - t0
+    rate = wl.num_packets * S / dt
+    rows.append(("fabric_sim_rate", dt * 1e6, f"{rate/1e6:.2f}Mpkt-slice/s"))
+    return rows

@@ -1,0 +1,23 @@
+"""Paper §7 "Minimum time slice duration": the guardband derivation — the
+headline 2 us claim."""
+from __future__ import annotations
+
+from repro.core import GuardbandInputs, derive_guardband
+from .common import timed
+
+
+def run(quick: bool = False):
+    g, us = timed(derive_guardband)
+    rows = [
+        ("minslice_rotation_variance", us, f"{g.rotation_variance_ns:.0f}ns"),
+        ("minslice_eqo_error", us, f"{g.eqo_error_ns:.0f}ns"),
+        ("minslice_sync_guard", us, f"{g.sync_guard_ns:.0f}ns"),
+        ("minslice_guardband", us, f"{g.guardband_ns:.0f}ns"),
+        ("minslice_min_slice", us, f"{g.min_slice_us:.1f}us"),
+        ("minslice_duty_cycle", us, f"{100*g.duty_cycle:.0f}%"),
+        ("minslice_waste_fraction", us, f"{100*g.wasted_fraction:.1f}%"),
+    ]
+    # sensitivity: a future 400G fabric halves the EQO time contribution
+    g400, _ = timed(derive_guardband, GuardbandInputs(link_gbps=400.0))
+    rows.append(("minslice_min_slice[400G]", us, f"{g400.min_slice_us:.1f}us"))
+    return rows

@@ -1,0 +1,44 @@
+"""Render the dry-run artifacts as the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+
+from .roofline import load_cells
+
+NOTES = {
+    "memory_s": "reduce HBM traffic: fused/chunked attention, bf16 residuals, remat",
+    "compute_s": "already compute-bound: raise MFU via larger per-chip tiles",
+    "collective_s": "cut wire bytes: bf16/RS+AG gradient reduction, EP all-to-all instead of AG",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    print("| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | frac | MODEL/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if args.mesh != "both" and c.get("mesh") != args.mesh:
+            continue
+        tag = f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+        if "skipped" in c:
+            print(tag + f"| — | — | — | skipped | — | — | {c['skipped']} |")
+            continue
+        if "error" in c:
+            print(tag + f"| — | — | — | ERROR | — | — | {c['error'][:60]} |")
+            continue
+        r = c["roofline"]
+        frac = r["compute_s"] / r["bound_s"]
+        useful = c.get("useful_flops_ratio") or 0.0
+        print(tag + f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+              f"{r['collective_s']:.2e} | {r['dominant'][:-2]} | {frac:.3f} | "
+              f"{useful:.2f} | {NOTES[r['dominant']]} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run artifacts (§Roofline of the brief).
+
+Reads artifacts/dryrun/*.json and emits, per (arch x shape x mesh):
+compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS ratio,
+and the roofline fraction (compute term / bound) — the §Perf score."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.distributed import PodFabric, allreduce_time_s
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(art_dir: str = ART):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fraction(cell) -> float | None:
+    r = cell.get("roofline")
+    if not r or not r.get("bound_s"):
+        return None
+    return r["compute_s"] / r["bound_s"]
+
+
+def run(quick: bool = False):
+    rows = []
+    sets = [("base", ART), ("opt", "artifacts/dryrun_opt")]
+    cells = []
+    for label, d in sets:
+        for c in load_cells(d):
+            c["_label"] = label
+            cells.append(c)
+    if not cells:
+        return [("roofline_missing_artifacts", 0.0,
+                 "run python -m repro.launch.dryrun --all --both-meshes first")]
+    worst, worst_frac = None, 1.0
+    for c in cells:
+        tag = f"{c['_label']},{c['arch']},{c['shape']},{c['mesh']}"
+        if "skipped" in c:
+            rows.append((f"roofline[{tag}]", 0.0, "skipped(sub-quadratic rule)"))
+            continue
+        if "error" in c:
+            rows.append((f"roofline[{tag}]", 0.0, f"ERROR {c['error'][:60]}"))
+            continue
+        r = c["roofline"]
+        fr = fraction(c)
+        if c["mesh"] == "single" and c["_label"] == "opt" and fr is not None and fr < worst_frac:
+            worst, worst_frac = tag, fr
+        rows.append((
+            f"roofline[{tag}]", c["compile_s"] * 1e6,
+            f"comp={r['compute_s']:.2e}s mem={r['memory_s']:.2e}s "
+            f"coll={r['collective_s']:.2e}s dom={r['dominant'][:-2]} "
+            f"frac={fr:.3f} useful={c.get('useful_flops_ratio') or 0:.2f}"))
+    if worst:
+        rows.append(("roofline_worst_fraction_cell", 0.0,
+                     f"{worst} frac={worst_frac:.4f}"))
+    # optical inter-pod gradient all-reduce model for the multi-pod mesh
+    fabric = PodFabric(n_pods=2)
+    for c in cells:
+        if c.get("mesh") == "multi" and c.get("shape") == "train_4k" \
+                and "error" not in c and "skipped" not in c:
+            gbytes = c["params"] * 4
+            t_al = allreduce_time_s(gbytes, fabric, aligned=True)
+            rows.append((f"optical_interpod_ar[{c['arch']}]", 0.0,
+                         f"{t_al*1e3:.1f}ms/step aligned"))
+    return rows

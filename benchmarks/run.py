@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs reduced settings."""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "fig8_fct",
+    "fig9_transport",
+    "fig10_slice_duration",
+    "fig12_eqo",
+    "fig13_udp_rtt",
+    "table2_state",
+    "table3_buffer",
+    "table4_congestion",
+    "min_slice",
+    "kernels_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run(quick=args.quick):
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

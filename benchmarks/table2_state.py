@@ -1,0 +1,34 @@
+"""Paper Table 2 analogue: dataplane state footprint at the 108-ToR scale.
+
+Tofino2 SRAM/TCAM percentages have no TPU meaning; the equivalent resource
+statement is the memory the OpenOptics dataplane state needs per node —
+time-flow tables, calendar-queue occupancy registers, push-back state —
+reported against the VMEM-resident budget the Pallas lookup kernel assumes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import round_robin, ucmp, vlb
+from .common import timed
+
+N_TORS = 108
+
+
+def run(quick: bool = False):
+    n = 24 if quick else N_TORS
+    sched, us_topo = timed(round_robin, n, 1)
+    routing, us_rt = timed(ucmp, sched)
+    T = sched.num_slices
+    tf_bytes = routing.tf_next.nbytes + routing.tf_dep.nbytes
+    per_slice_bytes = tf_bytes // T           # VMEM-resident working set
+    q_occ = n * 2 * T * 4                      # occupancy registers
+    pushback = n * T * 4
+    rows = [
+        ("table2_tf_table_total", us_rt, f"{tf_bytes/1e6:.1f}MB"),
+        ("table2_tf_table_per_slice", us_rt, f"{per_slice_bytes/1e3:.0f}KB"),
+        ("table2_queue_registers", us_topo, f"{q_occ/1e3:.0f}KB"),
+        ("table2_pushback_state", us_topo, f"{pushback/1e3:.0f}KB"),
+        ("table2_per_slice_vs_16MB_vmem", us_rt,
+         f"{100*per_slice_bytes/(16<<20):.2f}%"),
+    ]
+    return rows

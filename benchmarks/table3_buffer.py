@@ -1,0 +1,38 @@
+"""Paper Table 3: 99.9%-ile switch buffer usage under VLB (+offloading),
+HOHO, UCMP across the three traces, 300 us slices."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TRACES, hoho, round_robin, synthesize, ucmp, vlb
+from repro.core.fabric import FabricConfig, FabricTables, simulate
+from .common import slice_bytes, timed
+
+SLICE_US = 300.0
+
+
+def run(quick: bool = False):
+    n = 16 if quick else 32   # scaled-down 108-ToR setting (sim cost)
+    sb = slice_bytes(SLICE_US)
+    sched = round_robin(n, 1, slice_us=SLICE_US)
+    rows = []
+    traces = TRACES[:1] if quick else TRACES
+    routings = {"vlb": vlb(sched), "hoho": hoho(sched), "ucmp": ucmp(sched)}
+    for trace in traces:
+        wl = synthesize(trace, n, 60, slice_bytes=sb, load=0.4,
+                        cell_bytes=15_000, max_packets=20_000, seed=11)
+        for rname, routing in routings.items():
+            tables = FabricTables.build(sched, routing)
+            cfg = FabricConfig(slice_bytes=sb, hops_per_slice=1)
+            res, us = timed(simulate, tables, wl, cfg, 160)
+            p999 = float(np.percentile(res.buf_bytes.max(axis=1), 99.9))
+            rows.append((f"table3_buf_p999[{trace},{rname}]", us,
+                         f"{p999/1e6:.2f}MB"))
+            if rname == "vlb":
+                cfg2 = FabricConfig(slice_bytes=sb, hops_per_slice=1,
+                                    offload=True, offload_horizon=2)
+                res2, us2 = timed(simulate, tables, wl, cfg2, 160)
+                p999o = float(np.percentile(res2.buf_bytes.max(axis=1), 99.9))
+                rows.append((f"table3_buf_p999[{trace},vlb+offload]", us2,
+                             f"{p999o/1e6:.2f}MB"))
+    return rows

@@ -1,0 +1,44 @@
+"""Paper Table 4: congestion detection + traffic push-back effectiveness on
+HOHO at stressed load (70% core utilisation), small switch buffers to expose
+the loss regime."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hoho, round_robin, synthesize
+from repro.core.fabric import FabricConfig, FabricTables, simulate
+from .common import slice_bytes, timed
+
+SLICE_US = 300.0
+
+
+def run(quick: bool = False):
+    n = 12 if quick else 16
+    sb = slice_bytes(SLICE_US)
+    sched = round_robin(n, 1, slice_us=SLICE_US)
+    tables = FabricTables.build(sched, hoho(sched))
+    wl = synthesize("hadoop", n, 50, slice_bytes=sb, load=0.7,
+                    cell_bytes=15_000, max_packets=6_000 if quick else 12_000,
+                    seed=13)
+    rows = []
+    cases = [
+        ("noCC", dict(cc_detect=False, pushback=False)),
+        ("CC", dict(cc_detect=True, pushback=False)),
+        ("CC+PB", dict(cc_detect=True, pushback=True)),
+    ]
+    for name, kw in cases:
+        cfg = FabricConfig(slice_bytes=sb, hops_per_slice=1,
+                           switch_buffer=int(0.75 * sb), **kw)
+        res, us = timed(simulate, tables, wl, cfg, 350)
+        done = res.t_deliver >= 0
+        P = wl.num_packets
+        loss = int(res.dropped[-1]) / P
+        d = (res.t_deliver - wl.t_inject)[done] * SLICE_US
+        dur = max(int(res.t_deliver.max()) + 1, 1)
+        gbps = wl.size[done].sum() * 8 / (dur * SLICE_US * 1e3)
+        rows.append((f"table4_loss[{name}]", us, f"{100*loss:.2f}%"))
+        rows.append((f"table4_avg_delay[{name}]", us, f"{d.mean():.0f}us"))
+        rows.append((f"table4_p95_delay[{name}]", us,
+                     f"{np.percentile(d, 95):.0f}us"))
+        rows.append((f"table4_goodput[{name}]", us, f"{gbps:.0f}Gbps"))
+    return rows

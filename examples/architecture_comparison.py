@@ -1,0 +1,30 @@
+"""Paper §6 Case I: side-by-side comparison of six optical DCN architectures
+(+ UCMP on RotorNet) on identical traffic — the study OpenOptics exists to
+enable.
+
+    PYTHONPATH=src python examples/architecture_comparison.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+
+from benchmarks.common import build_arch, slice_bytes, traffic_tm
+from benchmarks.fig8_fct import _workload, N, SLICE_US, SLICES, ARCHS
+from repro.core import flow_fcts
+
+wl, n_mice = _workload()
+tm = traffic_tm(wl, N)
+mice = np.zeros(wl.num_flows, bool)
+mice[:n_mice] = True
+
+print(f"{'architecture':16s} {'mice p50':>9s} {'mice p99':>9s} {'eleph p50':>10s}")
+for name in ARCHS:
+    setup = build_arch(name, N, SLICE_US, tm=tm)
+    res = setup.net.run(wl, SLICES)
+    fm = flow_fcts(wl, res.t_deliver, SLICE_US, only=mice)
+    fe = flow_fcts(wl, res.t_deliver, SLICE_US, only=~mice)
+    print(f"{name:16s} {np.median(fm):8.0f}us {np.percentile(fm, 99):8.0f}us "
+          f"{np.median(fe):9.0f}us")

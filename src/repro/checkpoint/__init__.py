@@ -1,0 +1,2 @@
+from .checkpoint import save, restore, latest_step, cleanup
+__all__ = ["save", "restore", "latest_step", "cleanup"]

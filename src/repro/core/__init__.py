@@ -1,0 +1,34 @@
+"""OpenOptics core: the paper's contribution in JAX.
+
+Control plane (numpy/networkx, host-side — the paper's optical controller):
+  topology (schedules), routing (time-flow table compilation), net (user API).
+Data plane (JAX, jit-able — the paper's P4 switch system):
+  fabric (calendar queues, congestion detection, push-back, offloading),
+  eqo (occupancy-estimation model), guardband (min-slice derivation).
+"""
+from .topology import (Circuit, Schedule, connect, round_robin, edmonds, bvn,
+                       jupiter, sorn, uniform_mesh, circuits_to_conn,
+                       conn_to_circuits, deploy_topo_check)
+from .routing import (CompiledRouting, direct, vlb, opera, ucmp, hoho, ecmp,
+                      wcmp, ksp, neighbors, earliest_path, add_entry)
+from .timeflow import Entry, TimeFlowTable
+from .fabric import FabricConfig, FabricTables, Workload, SimResult, simulate
+from .net import OpenOpticsNet, clos_routing
+from .traces import synthesize, flow_fcts, TRACES
+from .guardband import GuardbandInputs, derive as derive_guardband
+from .eqo import simulate_eqo
+from . import toolkit
+
+__all__ = [
+    "Circuit", "Schedule", "connect", "round_robin", "edmonds", "bvn",
+    "jupiter", "sorn", "uniform_mesh", "circuits_to_conn", "conn_to_circuits",
+    "deploy_topo_check",
+    "CompiledRouting", "direct", "vlb", "opera", "ucmp", "hoho", "ecmp",
+    "wcmp", "ksp", "neighbors", "earliest_path", "add_entry",
+    "Entry", "TimeFlowTable",
+    "FabricConfig", "FabricTables", "Workload", "SimResult", "simulate",
+    "OpenOpticsNet", "clos_routing",
+    "synthesize", "flow_fcts", "TRACES",
+    "GuardbandInputs", "derive_guardband",
+    "simulate_eqo", "toolkit",
+]

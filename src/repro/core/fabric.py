@@ -1,0 +1,408 @@
+"""The OpenOptics data plane as a JAX program (paper §5).
+
+The paper re-architects switch queue management (P4 on Tofino2) to execute
+time-flow tables: calendar queues per egress port hold packets until their
+departure slice, a queue-occupancy estimate drives congestion detection,
+push-back pauses hosts, and buffers can be offloaded to hosts. Here the whole
+data plane is a single ``lax.scan`` over time slices with packets as
+structure-of-arrays tensors — fully ``jit``-able, so the simulator itself is a
+JAX workload (and the per-packet table lookup has a Pallas TPU kernel,
+``repro.kernels.time_flow_lookup``).
+
+Semantics per slice ``t`` (mirroring §5.1):
+  1. hosts inject packets whose time has come (unless push-back blocks them;
+     elephant flows under flow pausing wait for a direct circuit instead);
+  2. packets whose calendar queue becomes active (``dep == t``) transmit over
+     their circuit, subject to per-circuit capacity ``slice_bytes`` — the
+     admissible data amount of the slice. Packets may chain up to
+     ``hops_per_slice`` cut-through hops within the slice (Opera-style);
+  3. packets that do not fit miss the slice: with congestion detection they
+     are deferred and re-looked-up next slice (HOHO/UCMP-style); without it
+     they stall a full schedule cycle in the paused queue (paper §5.2);
+     push-back additionally blocks the source slice bucket for one cycle;
+  4. switch buffer accounting (with optional offloading of far-future
+     calendar queues to hosts) decides drops.
+
+An "electrical" egress (peer id == N) models the packet-switched fabric of
+hybrid architectures (c-Through) and the Clos baseline: always available,
+per-node capacity ``elec_bytes``, one-slice transit delay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .routing import CompiledRouting
+from .topology import Schedule
+
+__all__ = ["FabricConfig", "Workload", "FabricTables", "simulate", "SimResult"]
+
+NOT_INJECTED = -1
+DELIVERED = -2
+DROPPED = -3
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricConfig:
+    """Static fabric parameters (hashable; closed over by the jitted step)."""
+
+    slice_bytes: int = 75_000        # 100 Gbps x 6 us, per circuit per slice
+    elec_bytes: int = 0              # electrical egress capacity per node/slice
+    switch_buffer: int = 64 << 20    # Tofino2: 64 MB
+    hops_per_slice: int = 4
+    max_hops: int = 16
+    cc_detect: bool = True           # congestion detection (§5.2)
+    pushback: bool = False           # traffic push-back (§5.2)
+    offload: bool = False            # buffer offloading (§5.2)
+    offload_horizon: int = 2         # switch keeps N calendar queues; rest on hosts
+    flow_pausing: bool = False       # hold elephants for direct circuits (§5.2)
+    congestion_threshold: int = 1 << 30  # classic CC threshold, bytes per queue
+
+
+@dataclasses.dataclass
+class Workload:
+    """Packets (cells) to simulate, structure-of-arrays."""
+
+    src: np.ndarray       # [P] i32
+    dst: np.ndarray       # [P] i32
+    size: np.ndarray      # [P] i32 bytes
+    t_inject: np.ndarray  # [P] i32 slice index
+    flow: np.ndarray      # [P] i32 flow id (dense, < F)
+    seq: np.ndarray       # [P] i32 sequence within flow
+    is_eleph: np.ndarray  # [P] bool
+
+    @property
+    def num_packets(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_flows(self) -> int:
+        return int(self.flow.max()) + 1 if self.num_packets else 0
+
+
+@dataclasses.dataclass
+class FabricTables:
+    """Dense deployed state: the optical schedule + compiled time-flow tables."""
+
+    conn: np.ndarray       # [T, N, U]
+    tf_next: np.ndarray    # [Tr, N, D, K]
+    tf_dep: np.ndarray
+    inj_next: np.ndarray
+    inj_dep: np.ndarray
+    first_direct: np.ndarray  # [T, N, D] offset to next direct circuit (-1 none)
+    multipath: str = "packet"
+
+    @classmethod
+    def build(cls, sched: Schedule, routing: CompiledRouting) -> "FabricTables":
+        return cls(
+            conn=sched.conn,
+            tf_next=routing.tf_next, tf_dep=routing.tf_dep,
+            inj_next=routing.inj_next, inj_dep=routing.inj_dep,
+            first_direct=_first_direct(sched),
+            multipath=routing.multipath,
+        )
+
+
+def _first_direct(sched: Schedule) -> np.ndarray:
+    """first_direct[t, n, d]: slices to wait at node n (arriving slice t) for a
+    direct circuit n -> d; -1 if the schedule never provides one."""
+    T, N, U = sched.conn.shape
+    has = np.zeros((T, N, N), dtype=bool)
+    for t in range(T):
+        for k in range(U):
+            peer = sched.conn[t, :, k]
+            ok = peer >= 0
+            has[t, np.arange(N)[ok], peer[ok]] = True
+    fd = np.full((T, N, N), -1, dtype=np.int32)
+    for t in range(T):
+        for off in range(T):
+            tt = (t + off) % T
+            newly = has[tt] & (fd[t] < 0)
+            fd[t] = np.where(newly, off, fd[t])
+    return fd
+
+
+@dataclasses.dataclass
+class SimResult:
+    t_deliver: np.ndarray     # [P] slice of delivery (-1 undelivered)
+    loc_final: np.ndarray     # [P]
+    nhops: np.ndarray         # [P]
+    delivered_bytes: np.ndarray  # [S] per slice
+    dropped: np.ndarray       # [S] cumulative dropped-packet count at slice end
+    buf_bytes: np.ndarray     # [S, N] switch-resident buffer per node
+    offl_bytes: np.ndarray    # [S, N] host-offloaded buffer per node
+    blocked_inj: np.ndarray   # [S] injections deferred by push-back
+    slice_miss: np.ndarray    # [S] packets that missed their slice
+    reorder_cnt: np.ndarray   # scalar: out-of-order deliveries
+
+
+# ---------------------------------------------------------------------------
+# jitted machinery
+# ---------------------------------------------------------------------------
+
+def _hash32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def _lookup(next_tbl, dep_tbl, t, node, dst, hashv):
+    """Time-flow table lookup: match (arrival slice, dst) at ``node``; choose
+    a multipath slot by hash over the (contiguous) valid slots."""
+    Tr, _, _, K = next_tbl.shape
+    tm = t % Tr
+    row_n = next_tbl[tm, node, dst]          # [P, K]
+    row_d = dep_tbl[tm, node, dst]
+    nvalid = jnp.sum(row_n >= 0, axis=-1)    # [P]
+    slot = (hashv % jnp.maximum(nvalid, 1).astype(jnp.uint32)).astype(jnp.int32)
+    nxt = jnp.take_along_axis(row_n, slot[:, None], axis=-1)[:, 0]
+    off = jnp.take_along_axis(row_d, slot[:, None], axis=-1)[:, 0]
+    return nxt, off
+
+
+def _group_admit(key, size, want, cap_left, num_keys):
+    """Deterministic FIFO admission under per-key capacity.
+
+    Packets are processed in index order within each key group; a packet is
+    admitted if the group's running byte count still fits ``cap_left[key]``.
+    Returns (admitted mask, bytes-consumed-per-key).
+    """
+    P = key.shape[0]
+    key_eff = jnp.where(want, key, num_keys)  # park inactive in sentinel group
+    order = jnp.argsort(key_eff, stable=True)
+    k_s = key_eff[order]
+    sz_s = jnp.where(want, size, 0)[order]
+    cs = jnp.cumsum(sz_s)
+    cs_excl = cs - sz_s
+    is_start = jnp.concatenate([jnp.array([True]), k_s[1:] != k_s[:-1]])
+    base = jax.lax.cummax(jnp.where(is_start, cs_excl, -1))
+    prefix = cs_excl - base
+    cap_s = jnp.concatenate([cap_left, jnp.zeros((1,), cap_left.dtype)])[k_s]
+    adm_s = (prefix + sz_s <= cap_s) & (k_s < num_keys)
+    admitted = jnp.zeros((P,), bool).at[order].set(adm_s)
+    used = jax.ops.segment_sum(jnp.where(admitted, size, 0), key_eff,
+                               num_segments=num_keys + 1)[:num_keys]
+    return admitted, used
+
+
+def _build_caps(conn_t, cfg: FabricConfig, N: int):
+    """Per-circuit capacity for this slice, keyed loc*(N+1)+peer; key
+    loc*(N+1)+N is the electrical egress."""
+    caps = jnp.zeros((N * (N + 1),), jnp.int32)
+    U = conn_t.shape[1]
+    rows = jnp.arange(N, dtype=jnp.int32)
+    for k in range(U):
+        peer = conn_t[:, k]
+        keyk = rows * (N + 1) + jnp.where(peer >= 0, peer, N)  # dark -> elec key
+        add = jnp.where(peer >= 0, jnp.int32(cfg.slice_bytes), 0)
+        caps = caps.at[keyk].add(add)
+    caps = caps.at[rows * (N + 1) + N].add(jnp.int32(cfg.elec_bytes))
+    return caps
+
+
+def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
+             num_slices: int) -> SimResult:
+    """Run the fabric for ``num_slices`` slices. Everything inside is jitted;
+    re-compilation happens per (packet count, table shapes, config)."""
+    T, N, U = tables.conn.shape
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    j = dict(
+        conn=dev(tables.conn), tf_next=dev(tables.tf_next), tf_dep=dev(tables.tf_dep),
+        inj_next=dev(tables.inj_next), inj_dep=dev(tables.inj_dep),
+        first_direct=dev(tables.first_direct),
+        src=dev(wl.src), dst=dev(wl.dst), size=dev(wl.size),
+        t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
+        is_eleph=dev(wl.is_eleph, jnp.bool_),
+    )
+    per_packet_mp = tables.multipath == "packet"
+    out = _simulate_jit(j, cfg, num_slices, per_packet_mp,
+                        int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1)
+    return SimResult(**{k: np.asarray(v) for k, v in out.items()})
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
+                  num_flows: int):
+    T, N, U = j["conn"].shape
+    P = j["src"].shape[0]
+    pid = jnp.arange(P, dtype=jnp.int32)
+    NKEY = N * (N + 1)
+
+    state = dict(
+        loc=jnp.full((P,), NOT_INJECTED, jnp.int32),
+        nxt=jnp.full((P,), -1, jnp.int32),
+        dep=jnp.zeros((P,), jnp.int32),
+        relook=jnp.zeros((P,), bool),
+        nhops=jnp.zeros((P,), jnp.int32),
+        t_del=jnp.full((P,), -1, jnp.int32),
+        block_until=jnp.zeros((N, T), jnp.int32),  # [dst, slice bucket]
+        max_seq=jnp.full((num_flows,), -1, jnp.int32),
+        reorder=jnp.zeros((), jnp.int32),
+    )
+
+    def mp_hash(t):
+        base = pid if per_packet_mp else j["flow"]
+        salt = jnp.uint32(t) * jnp.uint32(0x9E3779B9) if per_packet_mp else jnp.uint32(0)
+        return _hash32(base.astype(jnp.uint32) + salt)
+
+    def enqueue_checks(s, t, arrived, off):
+        """Congestion detection at enqueue (paper §5.2): a calendar queue is
+        full if occupancy would exceed the admissible amount for its slice.
+        Deferral (+ optional push-back) happens here."""
+        dep_abs = t + off
+        # occupancy of the target queue bucket (node, dep mod 2T) right now
+        qb = (s["loc"] * (2 * T) + dep_abs % (2 * T))
+        waiting = (s["loc"] >= 0) & (s["dep"] > t)
+        occ = jax.ops.segment_sum(jnp.where(waiting, j["size"], 0),
+                                  jnp.where(waiting, s["loc"] * (2 * T) + s["dep"] % (2 * T), N * 2 * T),
+                                  num_segments=N * 2 * T + 1)[:N * 2 * T]
+        q_occ = occ[jnp.clip(qb, 0, N * 2 * T - 1)]
+        limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
+        # occupancy already includes the packet itself (it is waiting)
+        full = arrived & (off > 0) & (q_occ > limit)
+        if cfg.cc_detect:
+            # defer: retry (re-lookup) next slice
+            defer = full
+            s["relook"] = s["relook"] | defer
+            s["dep"] = jnp.where(defer, t + 1, s["dep"])
+            if cfg.pushback:
+                blk_t = dep_abs % T
+                upd = jnp.where(defer, t + T, 0)
+                s["block_until"] = s["block_until"].at[j["dst"], blk_t].max(upd)
+        return s, full
+
+    def step(state, t):
+        s = dict(state)
+        h = mp_hash(t)
+
+        # -- 1. injection -------------------------------------------------
+        ready = (j["t_inject"] <= t) & (s["loc"] == NOT_INJECTED)
+        nxt_i, off_i = _lookup(j["inj_next"], j["inj_dep"], t, j["src"], j["dst"], h)
+        if cfg.flow_pausing:
+            fd = j["first_direct"][t % T, j["src"], j["dst"]]
+            use_direct = j["is_eleph"] & (fd >= 0)
+            nxt_i = jnp.where(use_direct, j["dst"], nxt_i)
+            off_i = jnp.where(use_direct, fd, off_i)
+        if cfg.pushback:
+            # hosts hold traffic whose *target* slice bucket was pushed back
+            blocked = s["block_until"][j["dst"], (t + off_i) % T] > t
+        else:
+            blocked = jnp.zeros((ready.shape[0],), bool)
+        inject = ready & ~blocked
+        s["loc"] = jnp.where(inject, j["src"], s["loc"])
+        s["nxt"] = jnp.where(inject, nxt_i, s["nxt"])
+        s["dep"] = jnp.where(inject, t + off_i, s["dep"])
+        s, _ = enqueue_checks(s, t, inject, jnp.where(inject, off_i, 0))
+        n_blocked = jnp.sum(ready & blocked)
+
+        # -- 2. re-lookup deferred packets ---------------------------------
+        redo = s["relook"] & (s["loc"] >= 0) & (s["dep"] == t)
+        nxt_r, off_r = _lookup(j["tf_next"], j["tf_dep"], t, jnp.clip(s["loc"], 0, N - 1),
+                               j["dst"], h)
+        s["nxt"] = jnp.where(redo, nxt_r, s["nxt"])
+        s["dep"] = jnp.where(redo, t + off_r, s["dep"])
+        s["relook"] = s["relook"] & ~redo
+
+        # -- 3. transmission with cut-through chaining ---------------------
+        caps = _build_caps(j["conn"][t % T], cfg, N)
+        used = jnp.zeros((NKEY,), jnp.int32)
+        # switch buffer occupancy at slice start, for drop decisions
+        on_switch = (s["loc"] >= 0) & (s["dep"] > t) & \
+                    ((s["dep"] - t <= cfg.offload_horizon) if cfg.offload else True)
+        buf_now = jax.ops.segment_sum(jnp.where(on_switch, j["size"], 0),
+                                      jnp.clip(s["loc"], 0, N - 1) * jnp.where(s["loc"] >= 0, 1, 0),
+                                      num_segments=N)
+
+        for _hop in range(cfg.hops_per_slice):
+            want = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
+                   (s["nhops"] < cfg.max_hops)
+            if cfg.pushback:
+                # push-back rejects at the *sender*: no transmission into a
+                # full downstream switch (paper §5.2); rejected packets miss
+                # the slice and defer instead of being dropped on arrival.
+                # FIFO admission against the receiver's remaining buffer room.
+                need_buf = want & (s["nxt"] < N) & (s["nxt"] != j["dst"])
+                room = jnp.maximum(cfg.switch_buffer - buf_now, 0)
+                adm_rx, _ = _group_admit(jnp.clip(s["nxt"], 0, N - 1),
+                                         j["size"], need_buf, room, N)
+                want &= adm_rx | ~need_buf
+            key = jnp.clip(s["loc"], 0, N - 1) * (N + 1) + jnp.clip(s["nxt"], 0, N)
+            admitted, consumed = _group_admit(key, j["size"], want, caps - used, NKEY)
+            used = used + consumed
+            is_elec = admitted & (s["nxt"] == N)
+            moved = admitted & ~is_elec
+            newloc = jnp.where(moved, s["nxt"], s["loc"])
+            at_dst = (moved & (s["nxt"] == j["dst"])) | is_elec
+            # electrical fabric delivers with one-slice transit delay
+            s["t_del"] = jnp.where(at_dst, jnp.where(is_elec, t + 1, t), s["t_del"])
+            # reorder accounting
+            dseq = jnp.where(at_dst, j["seq"], -1)
+            prev_max = s["max_seq"][j["flow"]]
+            s["reorder"] = s["reorder"] + jnp.sum(at_dst & (j["seq"] < prev_max))
+            s["max_seq"] = s["max_seq"].at[j["flow"]].max(dseq)
+            s["loc"] = jnp.where(at_dst, DELIVERED, newloc)
+            s["nhops"] = s["nhops"] + admitted.astype(jnp.int32)
+            # transit lookup at the new node
+            in_transit = moved & ~at_dst
+            nxt_t, off_t = _lookup(j["tf_next"], j["tf_dep"], t,
+                                   jnp.clip(s["loc"], 0, N - 1), j["dst"], h)
+            s["nxt"] = jnp.where(in_transit, nxt_t, s["nxt"])
+            s["dep"] = jnp.where(in_transit, t + off_t, s["dep"])
+            # buffer-overflow drops on arrival at a new switch; a rejection
+            # also pushes the sender back (paper §5.2: "it and all subsequent
+            # packets to that queue should be rejected")
+            arr_sz = jax.ops.segment_sum(jnp.where(in_transit, j["size"], 0),
+                                         jnp.clip(s["loc"], 0, N - 1), num_segments=N)
+            buf_now = buf_now + arr_sz
+            overflow = in_transit & (buf_now[jnp.clip(s["loc"], 0, N - 1)] > cfg.switch_buffer)
+            if cfg.pushback:
+                upd = jnp.where(overflow, t + T, 0)
+                s["block_until"] = s["block_until"].at[
+                    j["dst"], s["dep"] % T].max(upd)
+            s["loc"] = jnp.where(overflow, DROPPED, s["loc"])
+            s, _full = enqueue_checks(s, t, in_transit & ~overflow,
+                                      jnp.where(in_transit, off_t, 0))
+
+        # -- 4. handle packets that missed their slice ----------------------
+        missed = (s["loc"] >= 0) & (s["dep"] == t)
+        miss_cnt = jnp.sum(missed)
+        if cfg.cc_detect:
+            s["relook"] = s["relook"] | missed
+            s["dep"] = jnp.where(missed, t + 1, s["dep"])
+        else:
+            # paused a full cycle in the calendar queue (paper §5.2)
+            s["dep"] = jnp.where(missed, t + T, s["dep"])
+        if cfg.pushback:
+            upd = jnp.where(missed, t + T, 0)
+            s["block_until"] = s["block_until"].at[j["dst"], t % T].max(upd)
+
+        # -- 5. per-slice stats --------------------------------------------
+        waiting = (s["loc"] >= 0) & (s["dep"] > t)
+        horizon_ok = (s["dep"] - t <= cfg.offload_horizon) if cfg.offload \
+            else jnp.ones_like(waiting)
+        seg = jnp.where(waiting, s["loc"], N)
+        on_sw = jax.ops.segment_sum(jnp.where(waiting & horizon_ok, j["size"], 0),
+                                    seg, num_segments=N + 1)[:N]
+        off_sw = jax.ops.segment_sum(jnp.where(waiting & ~horizon_ok, j["size"], 0),
+                                     seg, num_segments=N + 1)[:N]
+        stats = dict(
+            delivered_bytes=jnp.sum(jnp.where(s["t_del"] == t, j["size"], 0)),
+            dropped=jnp.sum(s["loc"] == DROPPED),
+            buf_bytes=on_sw, offl_bytes=off_sw,
+            blocked_inj=n_blocked, slice_miss=miss_cnt,
+        )
+        return s, stats
+
+    final, ys = jax.lax.scan(step, state, jnp.arange(num_slices, dtype=jnp.int32))
+    return dict(
+        t_deliver=final["t_del"], loc_final=final["loc"], nhops=final["nhops"],
+        delivered_bytes=ys["delivered_bytes"], dropped=ys["dropped"],
+        buf_bytes=ys["buf_bytes"], offl_bytes=ys["offl_bytes"],
+        blocked_inj=ys["blocked_inj"], slice_miss=ys["slice_miss"],
+        reorder_cnt=final["reorder"],
+    )

@@ -1,0 +1,427 @@
+"""Routing APIs (paper §4.2, Table 1 "Routing" rows) and the compiler from
+paths to time-flow tables (``deploy_routing``).
+
+TA algorithms (``direct``, ``ecmp``, ``wcmp``, ``ksp``) operate on a single
+topology instance (``Schedule.num_slices == 1``); TO algorithms (``vlb``,
+``opera``, ``ucmp``, ``hoho``) operate across time slices on the cyclic
+optical schedule. All of them compile to the same :class:`CompiledRouting`
+per-hop time-flow tables (paper §3), the dense lowering of Fig. 3:
+
+    match  (arrival slice mod T, dst)                      [+ hash for multipath]
+    action (egress peer = next hop, departure-slice offset)
+
+``inj_*`` tables are the *injection* (host/source) tables and ``tf_*`` the
+transit (switch) tables — the host/ToR split of the paper's testbed; VLB
+sprays at injection and runs direct-circuit at transit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import networkx as nx
+
+from .topology import Schedule
+
+__all__ = [
+    "CompiledRouting",
+    "direct",
+    "vlb",
+    "opera",
+    "ucmp",
+    "hoho",
+    "ecmp",
+    "wcmp",
+    "ksp",
+    "neighbors",
+    "earliest_path",
+    "add_entry",
+]
+
+INF = np.int64(1 << 40)
+
+
+@dataclasses.dataclass
+class CompiledRouting:
+    """Dense time-flow tables.
+
+    tf_next[t, n, d, k]: egress peer for a packet at node n, arrival slice t,
+        destination d, multipath slot k (-1 = invalid slot).
+    tf_dep[t, n, d, k]: departure-slice *offset* (0 = leave in this slice,
+        matching Fig. 3 where dep==arr; >0 = buffer in the calendar queue for
+        that many slices).
+    inj_next / inj_dep: same, consulted only for the packet's first hop.
+    multipath: "packet" (hash per packet) or "flow" (hash per flow id).
+    weights: optional WCMP weights aligned with the k axis (else uniform).
+    """
+
+    tf_next: np.ndarray
+    tf_dep: np.ndarray
+    inj_next: np.ndarray
+    inj_dep: np.ndarray
+    multipath: str = "packet"
+    lookup: str = "hop"
+    weights: np.ndarray | None = None
+
+    @property
+    def num_slices(self) -> int:
+        return int(self.tf_next.shape[0])
+
+    @property
+    def k(self) -> int:
+        return int(self.tf_next.shape[3])
+
+    def is_flow_table(self) -> bool:
+        """Backward compatibility (paper §3): with T == 1 and all departure
+        offsets 0, the time-flow table *is* a classical flow table."""
+        return self.num_slices == 1 and bool(np.all(self.tf_dep[self.tf_next >= 0] == 0))
+
+
+def add_entry(r: CompiledRouting, node: int, dst: int, egress: int,
+              arr_ts: int | None = None, dep_ts: int | None = None,
+              slot: int = 0, injection: bool = False) -> bool:
+    """Paper API ``add(Entry<arr_ts,src,dst,dep_ts>, node)`` — direct table
+    manipulation, e.g. for debugging. ``arr_ts=None``/``dep_ts=None`` are
+    wildcards (flow-table behaviour)."""
+    nxt, dep = (r.inj_next, r.inj_dep) if injection else (r.tf_next, r.tf_dep)
+    ts_range = range(r.num_slices) if arr_ts is None else [arr_ts % r.num_slices]
+    for t in ts_range:
+        off = 0 if dep_ts is None else (dep_ts - t) % max(r.num_slices, 1)
+        nxt[t, node, dst, slot] = egress
+        dep[t, node, dst, slot] = off
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Helpers (paper Table 1)
+# ---------------------------------------------------------------------------
+
+def neighbors(sched: Schedule, node: int, ts: int | None) -> np.ndarray:
+    """All nodes having a direct circuit from ``node`` in slice ``ts``
+    (``ts=None``: in any slice — the TA single-instance case)."""
+    if ts is None:
+        row = sched.conn[:, node, :]
+    else:
+        row = sched.conn[ts % sched.num_slices, node]
+    return np.unique(row[row >= 0])
+
+
+def earliest_path(sched: Schedule, src: int, dst: int, ts: int,
+                  max_hop: int = 4) -> list[tuple[int, int]]:
+    """Earliest-arrival path from ``src`` (at slice ``ts``) to ``dst``: a list
+    of (next_node, departure_slice) hops. Shortest-path routing on one
+    topology is the special case ``num_slices == 1``."""
+    cost, _ = _time_dp(sched, dst, max_hop)
+    B = _dp_B(sched, max_hop)
+    T = sched.num_slices
+    path, node, t = [], src, ts % T
+    guard = 0
+    while node != dst and guard < 4 * T * max_hop:
+        guard += 1
+        step = _best_step(sched, cost, B, dst, node, t)
+        if step is None:
+            return []
+        nxt, dep_abs = step
+        path.append((int(nxt), int(dep_abs)))
+        # the hop lands at the peer within dep_abs; next action is from dep_abs+1
+        node, t = nxt, dep_abs + 1
+    return path if node == dst else []
+
+
+# ---------------------------------------------------------------------------
+# Time-expanded dynamic program (shared by direct/ucmp/hoho/earliest_path)
+# ---------------------------------------------------------------------------
+
+def _time_dp(sched: Schedule, dst: int, max_hop: int):
+    """Backward DP over the time-expanded graph for one destination.
+
+    One circuit hop per slice (RotorNet/UCMP/HOHO semantics — a transmission
+    occupies its slice; in-slice multi-hop is Opera's separate regime):
+
+        cost[t, n] = min( cost[t+1, n],                      -- wait
+                          1 + t*B            if peer == dst  -- deliver now
+                          1 + cost[t+1, m]   otherwise )     -- hop, continue
+
+    with the lexicographic metric arrival_slice * B + hops (earliest arrival
+    first, fewest hops second). Horizon covers two schedule cycles so waits
+    may wrap the cyclic schedule. ``max_hop`` only sizes B (hop counts stay
+    below it for any sane schedule; the fabric enforces its own max).
+    """
+    T, N, U = sched.conn.shape
+    H = 2 * T
+    B = np.int64((max_hop + H) * (H + 2) + 1)
+    cost = np.full((H + 1, N), INF, dtype=np.int64)
+    cost[H, dst] = H * B
+    for t in range(H - 1, -1, -1):
+        c = cost[t + 1].copy()  # waiting one slice is free in hops
+        conn_t = sched.conn[t % T]  # [N, U]
+        for k in range(U):
+            peer = conn_t[:, k]
+            ok = peer >= 0
+            pc = np.where(peer == dst, t * B,
+                          cost[t + 1][np.clip(peer, 0, N - 1)])
+            cand = np.where(ok, pc + 1, INF)
+            c = np.minimum(c, cand)
+        cost[t] = c
+        cost[t, dst] = t * B
+    return cost, H
+
+
+def _dp_B(sched: Schedule, max_hop: int) -> np.int64:
+    H = 2 * sched.num_slices
+    return np.int64((max_hop + H) * (H + 2) + 1)
+
+
+def _hop_matches(sched: Schedule, cost, B, dst: int, n: int, tt: int,
+                 target_cost) -> list[int]:
+    """Peers m such that departing n -> m in slice tt achieves target_cost."""
+    T = sched.num_slices
+    out = []
+    for k in range(sched.num_uplinks):
+        m = sched.conn[tt % T, n, k]
+        if m < 0:
+            continue
+        val = (tt * B if m == dst else cost[tt + 1, m]) + 1
+        if val == target_cost and m not in out:
+            out.append(int(m))
+    return out
+
+
+def _best_step(sched: Schedule, cost, B, dst: int, node: int, t: int):
+    """Walk wait-links from (node, t) to the first slice where hopping attains
+    the optimal cost. Returns (next_node, departure_slice) or None."""
+    H = cost.shape[0] - 1
+    c_opt = cost[t, node]
+    if c_opt >= INF:
+        return None
+    tt = t
+    while tt < H:
+        ms = _hop_matches(sched, cost, B, dst, node, tt, c_opt)
+        if ms:
+            return ms[0], tt
+        if cost[tt + 1, node] == c_opt:
+            tt += 1
+            continue
+        return None
+    return None
+
+
+def _dp_tables(sched: Schedule, max_hop: int, kpaths: int):
+    """Compile earliest-arrival per-hop time-flow tables for every destination.
+
+    For each (t, n, d) we fill up to ``kpaths`` (egress, dep-offset) actions
+    achieving the optimal (arrival slice, hops) cost — UCMP's uniform-cost
+    set; slot 0 alone is the HOHO single earliest path.
+    """
+    T, N, U = sched.conn.shape
+    B = _dp_B(sched, max_hop)
+    tf_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
+    for d in range(N):
+        cost, H = _time_dp(sched, d, max_hop)
+        for t in range(T):
+            for n in range(N):
+                if n == d or cost[t, n] >= INF:
+                    continue
+                c_opt = cost[t, n]
+                slot = 0
+                tt = t
+                # walk forward in time collecting equal-cost departure options
+                while tt < H and slot < kpaths:
+                    for m in _hop_matches(sched, cost, B, d, n, tt, c_opt):
+                        if slot < kpaths:
+                            tf_next[t, n, d, slot] = m
+                            tf_dep[t, n, d, slot] = tt - t
+                            slot += 1
+                    if tt + 1 <= H and cost[tt + 1, n] == c_opt:
+                        tt += 1
+                    else:
+                        break
+    return tf_next, tf_dep
+
+
+# ---------------------------------------------------------------------------
+# TO routing algorithms
+# ---------------------------------------------------------------------------
+
+def direct(sched: Schedule, **_) -> CompiledRouting:
+    """Direct-circuit routing: hold every packet at its source until the
+    one-hop circuit to its destination appears (paper Fig. 3a)."""
+    T, N, U = sched.conn.shape
+    tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    # first_at[t, n, d] = offset to the next slice >= t with a circuit n -> d
+    has = np.zeros((T, N, N), dtype=bool)
+    for t in range(T):
+        for k in range(U):
+            peer = sched.conn[t, :, k]
+            ok = peer >= 0
+            has[t, np.arange(N)[ok], peer[ok]] = True
+    for t in range(T):
+        for off in range(T):
+            tt = (t + off) % T
+            newly = has[tt] & (tf_next[t, :, :, 0] < 0)
+            tf_next[t, :, :, 0] = np.where(newly, np.arange(N)[None, :], tf_next[t, :, :, 0])
+            tf_dep[t, :, :, 0] = np.where(newly, off, tf_dep[t, :, :, 0])
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
+
+
+def vlb(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
+    """Valiant load balancing (RotorNet): injection sprays packets over the
+    currently connected neighbours (packet-level multipath); transit nodes run
+    direct-circuit routing, holding the packet for the rotor circuit to the
+    destination. Direct shortcut taken when the source already sees dst."""
+    base = direct(sched)
+    T, N, U = sched.conn.shape
+    inj_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
+    inj_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
+    for t in range(T):
+        for n in range(N):
+            peers = [int(m) for m in sched.conn[t, n] if m >= 0]
+            for d in range(N):
+                if d == n:
+                    continue
+                if d in peers:  # direct shortcut
+                    inj_next[t, n, d, 0] = d
+                    continue
+                for s, m in enumerate(p for p in peers if p != d):
+                    if s >= kpaths:
+                        break
+                    inj_next[t, n, d, s] = m
+    return CompiledRouting(base.tf_next, base.tf_dep, inj_next, inj_dep,
+                           multipath="packet")
+
+
+def opera(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
+    """Opera: within each slice the (expander) topology is treated as static
+    and packets ride multi-hop shortest paths that complete in-slice
+    (departure offset 0 on every hop)."""
+    T, N, U = sched.conn.shape
+    tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    for t in range(T):
+        g = nx.DiGraph()
+        g.add_nodes_from(range(N))
+        for n in range(N):
+            for k in range(U):
+                m = sched.conn[t, n, k]
+                if m >= 0:
+                    g.add_edge(n, int(m))
+        for d in range(N):
+            # BFS tree towards d gives the next hop on a shortest path
+            lengths = nx.single_target_shortest_path_length(g, d)
+            dist = {n: l for n, l in lengths.items()}
+            for n in range(N):
+                if n == d or n not in dist or dist[n] > max_hop:
+                    continue
+                for m in g.successors(n):
+                    if dist.get(m, INF) == dist[n] - 1:
+                        tf_next[t, n, d, 0] = m
+                        break
+    # Unreachable-in-slice pairs fall back to waiting for a direct circuit.
+    fallback = direct(sched)
+    missing = tf_next[:, :, :, 0] < 0
+    tf_next[:, :, :, 0] = np.where(missing, fallback.tf_next[:, :, :, 0], tf_next[:, :, :, 0])
+    tf_dep[:, :, :, 0] = np.where(missing, fallback.tf_dep[:, :, :, 0], tf_dep[:, :, :, 0])
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
+
+
+def ucmp(sched: Schedule, max_hop: int = 4, kpaths: int = 4, **_) -> CompiledRouting:
+    """UCMP: uniform-cost multi-path across time — all departure options whose
+    arrival slice equals the earliest achievable are load-balanced per packet."""
+    tf_next, tf_dep = _dp_tables(sched, max_hop, kpaths)
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
+                           multipath="packet")
+
+
+def hoho(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
+    """Hop-On Hop-Off: the single earliest-arrival (then fewest-hop) path —
+    slot 0 of the UCMP table."""
+    tf_next, tf_dep = _dp_tables(sched, max_hop, kpaths=1)
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
+
+
+# ---------------------------------------------------------------------------
+# TA routing algorithms (single topology instance)
+# ---------------------------------------------------------------------------
+
+def _instance_graph(sched: Schedule, ts: int = 0) -> nx.DiGraph:
+    N, U = sched.conn.shape[1:]
+    g = nx.DiGraph()
+    g.add_nodes_from(range(N))
+    for n in range(N):
+        for k in range(U):
+            m = sched.conn[ts, n, k]
+            if m >= 0:
+                g.add_edge(n, int(m))
+    return g
+
+
+def _shortest_next_hops(g: nx.DiGraph, n_nodes: int, kpaths: int):
+    tf_next = np.full((1, n_nodes, n_nodes, kpaths), -1, dtype=np.int32)
+    for d in range(n_nodes):
+        dist = dict(nx.single_target_shortest_path_length(g, d))
+        for n in range(n_nodes):
+            if n == d or n not in dist:
+                continue
+            slot = 0
+            for m in g.successors(n):
+                if dist.get(m, 1 << 30) == dist[n] - 1 and slot < kpaths:
+                    tf_next[0, n, d, slot] = m
+                    slot += 1
+    return tf_next
+
+
+def ecmp(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
+    """Equal-cost multi-path on one topology instance; time fields wildcarded
+    (the flow-table reduction of Fig. 3c)."""
+    N = sched.num_nodes
+    tf_next = _shortest_next_hops(_instance_graph(sched), N, kpaths)
+    tf_dep = np.zeros_like(tf_next)
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
+                           multipath="flow")
+
+
+def wcmp(sched: Schedule, tm: np.ndarray | None = None, kpaths: int = 4, **_) -> CompiledRouting:
+    """Weighted-cost multi-path (Jupiter): ECMP next hops weighted by the
+    downstream capacity (uplink multiplicity) toward the destination."""
+    r = ecmp(sched, kpaths=kpaths)
+    N = sched.num_nodes
+    weights = np.zeros(r.tf_next.shape, dtype=np.float32)
+    conn0 = sched.conn[0]
+    for n in range(N):
+        for d in range(N):
+            for s in range(r.k):
+                m = r.tf_next[0, n, d, s]
+                if m >= 0:
+                    weights[0, n, d, s] = max(1, int(np.sum(conn0[n] == m)))
+    r.weights = weights
+    r.multipath = "flow"
+    return r
+
+
+def ksp(sched: Schedule, k: int = 4, max_hop: int = 6, **_) -> CompiledRouting:
+    """k-shortest-path routing (Flat-tree style): merge the first hops of the
+    k shortest simple paths per pair into the multipath slots."""
+    N = sched.num_nodes
+    g = _instance_graph(sched)
+    tf_next = np.full((1, N, N, k), -1, dtype=np.int32)
+    for s_node in range(N):
+        for d in range(N):
+            if s_node == d or not nx.has_path(g, s_node, d):
+                continue
+            slot = 0
+            seen = set()
+            try:
+                for path in nx.shortest_simple_paths(g, s_node, d):
+                    if len(path) - 1 > max_hop or slot >= k:
+                        break
+                    if path[1] not in seen:
+                        tf_next[0, s_node, d, slot] = path[1]
+                        seen.add(path[1])
+                        slot += 1
+            except nx.NetworkXNoPath:
+                continue
+    tf_dep = np.zeros_like(tf_next)
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
+                           multipath="flow")

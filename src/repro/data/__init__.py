@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, SyntheticLM, pack_documents
+__all__ = ["DataConfig", "SyntheticLM", "pack_documents"]

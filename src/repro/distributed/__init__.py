@@ -1,0 +1,9 @@
+from .sharding import (param_shardings, batch_shardings, cache_shardings,
+                       data_axes, replicated, opt_state_shardings,
+                       frontend_sharding)
+from .collectives import (PodFabric, CollectivePlan, plan_ring_allreduce,
+                          allreduce_time_s, ring_schedule)
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "data_axes", "replicated", "opt_state_shardings",
+           "frontend_sharding", "PodFabric", "CollectivePlan",
+           "plan_ring_allreduce", "allreduce_time_s", "ring_schedule"]

@@ -1,0 +1,202 @@
+"""Sharding rules: parameters, optimizer state, batches, decode caches.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The pod axis is pure data parallelism across the optically-switched inter-pod
+fabric; "model" carries TP (attention/MLP), EP (MoE experts) and SP (decode
+KV-cache sequence) depending on what divides evenly:
+
+  attention/MLP in-projections  [d, X]        -> shard X on model
+  out-projections               [X, d]        -> shard X on model
+  MoE expert stacks             [E, d, ff]    -> shard E on model (EP)
+  embedding                     [V, d]        -> shard V on model
+  decode KV caches                            -> heads if Kv % model == 0,
+                                                 else sequence (SP decode)
+
+Group-stacked parameters (leading n_groups axis from the scanned stack) get a
+None prepended. Anything that does not divide evenly is replicated rather
+than padded (the rule prefers correctness; XLA may still pad internals).
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+__all__ = ["param_shardings", "batch_shardings", "cache_shardings",
+           "data_axes", "replicated", "opt_state_shardings",
+           "frontend_sharding"]
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+# suffix-pattern -> candidate dims to shard on "model" (first that divides
+# wins), counted on the base (unstacked) shape; no match -> replicate.
+_RULES: list[tuple[str, tuple[int, ...]]] = [
+    (r"\['moe'\]\['w_(gate|up)'\]$", (0, 2)),   # [E, d, ff] -> EP, else ff
+    (r"\['moe'\]\['w_down'\]$", (0, 1)),        # [E, ff, d]
+    (r"\['(wq|wk|wv)'\]$", (1,)),
+    (r"\['wo'\]$", (0,)),
+    (r"\['w_(gate|up|in|gate_branch)'\]$", (1,)),
+    (r"\['w_(down|out)'\]$", (0,)),
+    (r"\['w_[ax]'\]$", (1,)),                   # rg-lru square mats
+    (r"\['w_x'\]$", (1,)),                      # slstm input proj [d, 4d]
+    (r"\['w_h'\]$", (1,)),
+    (r"\['embed'\]$", (0, 1)),                  # [V, d] -> vocab, else d
+    (r"\['lm_head'\]$", (1, 0)),                # [d, V]
+    (r"\['frontend_proj'\]$", (1,)),
+]
+
+
+_PAD_OK = re.compile(r"\['(embed|lm_head)'\]$")
+
+
+def _base_spec(key: str, shape: tuple[int, ...], msize: int,
+               stacked: bool) -> P:
+    base = shape[1:] if stacked else shape
+    for pat, dims in _RULES:
+        if re.search(pat, key):
+            for dim in dims:
+                if dim < len(base) and base[dim] % msize == 0:
+                    spec = [None] * len(base)
+                    spec[dim] = "model"
+                    return P(*([None] + spec)) if stacked else P(*spec)
+            # embeddings/heads with non-divisible vocab (granite 49155,
+            # seamless 256206): shard padded rather than replicate — an
+            # unsharded vocab dim replicates full f32 logits/grads per device
+            if _PAD_OK.search(key):
+                dim = dims[0]
+                if dim < len(base) and base[dim] > 8 * msize:
+                    spec = [None] * len(base)
+                    spec[dim] = "model"
+                    return P(*([None] + spec)) if stacked else P(*spec)
+            break  # matched but nothing divides -> replicate
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(params_shapes, mesh: Mesh, cfg: ArchConfig):
+    """params_shapes: pytree of ShapeDtypeStruct (or arrays). Returns a
+    matching pytree of NamedSharding. With ``cfg.fsdp`` parameters also shard
+    over the data axis on a spare dim (XLA all-gathers at use — ZeRO-3)."""
+    msize = _model_size(mesh)
+    dsize = mesh.shape["data"]
+
+    def one(path, leaf):
+        key = jax.tree_util.keystr(path)
+        stacked = "['groups']" in key or "['enc_groups']" in key
+        spec = _base_spec(key, tuple(leaf.shape), msize, stacked)
+        if cfg.fsdp:
+            lst = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            for dim, ax in enumerate(lst):
+                if ax is None and leaf.shape[dim] % dsize == 0 and \
+                        leaf.shape[dim] >= 4 * dsize:
+                    lst[dim] = "data"
+                    break
+            spec = P(*lst)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_state_shardings(params_shardings, params_shapes=None,
+                        zero: bool = True):
+    """mu/nu mirror the parameter shardings; with ``zero`` (ZeRO-style) they
+    additionally shard over the data axis on the first divisible dim that the
+    parameter sharding leaves unsharded (optimizer state is touched only at
+    the update, so the resharding cost is one gather per step)."""
+    def mesh_of(tree):
+        return jax.tree.leaves(tree)[0].mesh
+    m = mesh_of(params_shardings)
+    if not zero or params_shapes is None:
+        return {"mu": params_shardings, "nu": params_shardings,
+                "step": NamedSharding(m, P())}
+    dsize = m.shape["data"]
+
+    def widen(sh, shape_leaf):
+        spec = list(sh.spec) + [None] * (len(shape_leaf.shape) - len(sh.spec))
+        if "data" in spec:          # fsdp params already use the data axis
+            return NamedSharding(m, P(*spec))
+        for dim, ax in enumerate(spec):
+            if ax is None and shape_leaf.shape[dim] % dsize == 0 and \
+                    shape_leaf.shape[dim] >= 4 * dsize:
+                spec[dim] = "data"
+                break
+        return NamedSharding(m, P(*spec))
+
+    zshard = jax.tree.map(widen, params_shardings, params_shapes)
+    return {"mu": zshard, "nu": zshard, "step": NamedSharding(m, P())}
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(mesh: Mesh, batch: int | None = None):
+    """tokens/labels [B, L] sharded over the data(+pod) axes on batch;
+    replicated when the batch does not divide (e.g. long_500k batch=1)."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    spec = P(dp, None) if (batch is None or batch % dp_size == 0) else P(None, None)
+    return {
+        "tokens": NamedSharding(mesh, spec),
+        "labels": NamedSharding(mesh, spec),
+    }
+
+
+def frontend_sharding(mesh: Mesh):
+    dp = data_axes(mesh)
+    return NamedSharding(mesh, P(dp, None, None))
+
+
+def cache_shardings(cache, mesh: Mesh, cfg: ArchConfig, batch: int):
+    """Decode caches: batch on data axes when it divides; KV heads on model
+    when they divide, else cache sequence on model (sequence-parallel
+    decode); recurrent states shard their width on model when divisible."""
+    msize = _model_size(mesh)
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    bax = dp if batch % dp_size == 0 else None
+
+    def spec_for(path, leaf):
+        key = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        stacked = "['groups']" in key
+        base = shape[1:] if stacked else shape
+        spec: list = [None] * len(base)
+        if ".k" in key or ".v" in key or re.search(r"\['enc_out'\]$", key):
+            # AttnCache k/v: [B, S, Kv, hd]; enc_out: [B, Le, d]
+            if len(base) >= 1 and bax and base[0] % dp_size == 0:
+                spec[0] = bax
+            if len(base) == 4:
+                if base[2] % msize == 0:
+                    spec[2] = "model"
+                elif base[1] % msize == 0:
+                    spec[1] = "model"
+            elif len(base) == 3 and base[2] % msize == 0:
+                spec[2] = "model"
+        elif ".pos" in key:
+            if bax and base[0] % dp_size == 0:
+                spec[0] = bax
+            # pos [B, S] must co-shard with k/v's S dim
+            kv_heads_ok = cfg.n_kv_heads % msize == 0
+            if not kv_heads_ok and len(base) == 2 and base[1] % msize == 0:
+                spec[1] = "model"
+        else:
+            # recurrent states: [B, ...]; shard trailing width if divisible
+            if bax and len(base) >= 1 and base[0] % dp_size == 0:
+                spec[0] = bax
+            if len(base) >= 2 and base[-1] % msize == 0 and len(base) == 2:
+                spec[-1] = "model"
+        full = ([None] + spec) if stacked else spec
+        return NamedSharding(mesh, P(*full))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -1,0 +1,5 @@
+from .elastic import (MeshPlan, shrink_mesh, ElasticPlan, plan_remesh,
+                      StragglerPolicy, apply_straggler_policy,
+                      renormalize_grads)
+__all__ = ["MeshPlan", "shrink_mesh", "ElasticPlan", "plan_remesh",
+           "StragglerPolicy", "apply_straggler_policy", "renormalize_grads"]

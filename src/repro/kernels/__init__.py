@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three pieces: <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), the jit'd dispatcher in ops.py, and the pure-jnp oracle in ref.py.
+Kernels are validated in interpret mode on CPU (tests/test_kernels.py sweeps
+shapes and dtypes against the oracles).
+"""
+from . import ops, ref
+from .ops import (flash_attention, decode_attention, grouped_matmul, rg_lru,
+                  time_flow_lookup)
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention",
+           "grouped_matmul", "rg_lru", "time_flow_lookup"]

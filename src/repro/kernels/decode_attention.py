@@ -1,0 +1,102 @@
+"""Flash-decode Pallas TPU kernel: one query token per sequence against a
+(ring-buffer) KV cache.
+
+Tiling: grid = (batch*kv_heads, S/bs) with the cache-length dimension
+innermost/sequential; the GQA group of q heads sharing a kv head is processed
+together as the [G, hd] q block, so the kernel's matmuls are [G,hd]x[hd,bs]
+and [G,bs]x[bs,hd] — bs defaults to 128 for lane alignment. The validity mask
+(empty slots / causality / local window) is precomputed by the wrapper from
+the cache's absolute-position array.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BS = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float, ns: int):
+    js = pl.program_id(1)
+
+    @pl.when(js == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                 # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)           # [bs, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask_ref[0][None, :], s, NEG_INF)  # [G, bs]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    m_scr[...] = m_new
+    v = v_ref[0, :, 0].astype(jnp.float32)           # [bs, hd]
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(js == ns - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_q_heads", "n_kv_heads", "window", "softcap", "scale",
+                     "bs", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, cur_index, *, n_q_heads: int,
+                     n_kv_heads: int, window: int = 0, softcap: float = 0.0,
+                     scale: float | None = None, bs: int = DEFAULT_BS,
+                     interpret: bool = True):
+    """q: [B, Hq, hd]; k/v cache: [B, S, Kv, hd]; pos: [B, S] absolute key
+    positions (-1 = empty); cur_index: scalar int32. Returns [B, Hq, hd]."""
+    B, Hq, hd = q.shape
+    S, Kv = k_cache.shape[1], k_cache.shape[2]
+    G = n_q_heads // n_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bs = min(bs, S)
+    assert S % bs == 0
+    ns = S // bs
+
+    valid = (pos >= 0) & (pos <= cur_index)
+    if window > 0:
+        valid &= pos > cur_index - window
+
+    # [B, Hq, hd] -> [B*Kv, G, hd] so each grid row owns one kv head's group
+    qg = q.reshape(B, Kv, G, hd).reshape(B * Kv, G, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, softcap=softcap, ns=ns),
+        grid=(B * Kv, ns),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda bh, js: (bh, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bh, js: (bh // Kv, js, bh % Kv, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bh, js: (bh // Kv, js, bh % Kv, 0)),
+            pl.BlockSpec((1, bs), lambda bh, js: (bh // Kv, js)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, js: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid)
+    return out.reshape(B, Kv, G, hd).reshape(B, Hq, hd)

@@ -1,0 +1,54 @@
+"""Grouped (per-expert) matmul Pallas TPU kernel — the MoE expert compute.
+
+x[g] @ w[g] for every group g (experts after capacity dispatch). Tiling:
+grid = (G, M/bm, N/bn, K/bk), K innermost/sequential with an f32 VMEM
+accumulator; bm/bn/bk default to 128/128/512 so every contraction hits the
+MXU with aligned tiles. VMEM per step = bm*bk + bk*bn + bm*bn(f32)
+~ 0.5 MB at defaults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_scr, *, nk: int):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot(
+        x_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _finalize():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 512,
+                   interpret: bool = True):
+    """x: [G, M, K]; w: [G, K, N] -> [G, M, N]."""
+    G, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(G, M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

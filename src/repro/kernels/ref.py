@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, n_q_heads, n_kv_heads, causal=True,
+                        window=0, softcap=0.0, scale=None, q_offset=0):
+    """q: [B*Hq, Lq, hd]; k/v: [B*Hkv, S, hd]."""
+    BH, Lq, hd = q.shape
+    B = BH // n_q_heads
+    S = k.shape[1]
+    group = n_q_heads // n_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, n_kv_heads, group, Lq, hd)
+    kh = k.reshape(B, n_kv_heads, S, hd)
+    vh = v.reshape(B, n_kv_heads, S, hd)
+    s = jnp.einsum("bkgld,bksd->bkgls", qh, kh).astype(jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_offset + jnp.arange(Lq)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((Lq, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgls,bksd->bkgld", w.astype(v.dtype), vh)
+    return out.reshape(BH, Lq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, cur_index, *,
+                         n_q_heads, n_kv_heads, window=0, softcap=0.0,
+                         scale=None):
+    """q: [B, Hq, hd]; k/v cache: [B, S, Kv, hd]; pos: [B, S] absolute key
+    positions (-1 empty); cur_index: scalar current position."""
+    B, Hq, hd = q.shape
+    S = k_cache.shape[1]
+    group = n_q_heads // n_kv_heads
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, n_kv_heads, group, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache).astype(jnp.float32) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (pos >= 0) & (pos <= cur_index)
+    if window > 0:
+        valid &= pos > cur_index - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def grouped_matmul_ref(x, w):
+    """x: [G, M, K]; w: [G, K, N] -> [G, M, N] (the MoE expert einsum)."""
+    return jnp.einsum("gmk,gkn->gmn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rg_lru_ref(a, b):
+    """Linear recurrence h_t = a_t * h_{t-1} + b_t over axis 1.
+    a/b: [B, L, W] float32; h_0 = 0."""
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def time_flow_lookup_ref(tbl_next, tbl_dep, node, dst, hashv):
+    """Per-packet time-flow table lookup (tables pre-sliced at the current
+    slice): tbl_*: [N, D, K]; node/dst: [P] int32; hashv: [P] uint32.
+    Valid multipath slots are contiguous from 0 (compiler invariant)."""
+    rows_n = tbl_next[node, dst]            # [P, K]
+    rows_d = tbl_dep[node, dst]
+    nvalid = jnp.sum(rows_n >= 0, axis=-1)
+    slot = (hashv % jnp.maximum(nvalid, 1).astype(jnp.uint32)).astype(jnp.int32)
+    nxt = jnp.take_along_axis(rows_n, slot[:, None], axis=-1)[:, 0]
+    dep = jnp.take_along_axis(rows_d, slot[:, None], axis=-1)[:, 0]
+    return nxt, dep

@@ -1,0 +1,59 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel (RecurrentGemma/Griffin).
+
+Computes h_t = a_t * h_{t-1} + b_t with h_0 = 0 along the time axis.
+Tiling: grid = (B, W/bw, L/bl) with time innermost/sequential; the carried
+hidden state h lives in VMEM scratch across time blocks. Inside a block the
+recurrence is evaluated with an associative scan over [bl, bw] (log-depth on
+the VPU) and the carried state is folded in via the cumulative decay —
+h_t = scan(b)_t + cumprod(a)_t * h_carry. Channel blocks (bw = 512 lanes)
+are independent, so the grid parallelises across them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h_ref, carry_scr, *, nl: int):
+    ll = pl.program_id(2)
+
+    @pl.when(ll == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    a = a_ref[0]                      # [bl, bw] f32
+    b = b_ref[0]
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=0)
+    h = hh + aa * carry_scr[...][None, :]
+    h_ref[0] = h
+    carry_scr[...] = h[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bw", "interpret"))
+def rg_lru(a, b, *, bl: int = 256, bw: int = 512, interpret: bool = True):
+    """a, b: [B, L, W] float32 -> h: [B, L, W]."""
+    B, L, W = a.shape
+    bl, bw = min(bl, L), min(bw, W)
+    assert L % bl == 0 and W % bw == 0, (L, W, bl, bw)
+    return pl.pallas_call(
+        functools.partial(_kernel, nl=L // bl),
+        grid=(B, W // bw, L // bl),
+        in_specs=[
+            pl.BlockSpec((1, bl, bw), lambda bb, ww, ll: (bb, ll, ww)),
+            pl.BlockSpec((1, bl, bw), lambda bb, ww, ll: (bb, ll, ww)),
+        ],
+        out_specs=pl.BlockSpec((1, bl, bw), lambda bb, ww, ll: (bb, ll, ww)),
+        out_shape=jax.ShapeDtypeStruct((B, L, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

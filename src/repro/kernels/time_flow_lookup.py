@@ -1,0 +1,72 @@
+"""Time-flow table lookup Pallas TPU kernel — the paper's data-plane hot op.
+
+The P4 dataplane's match-action lookup (arrival slice, dst) -> (egress,
+departure slice) maps onto TPU as: the current slice's table slice
+[N, D, K] resident in VMEM (the match-action SRAM analogue; 108-ToR tables
+are ~370 KB), packets streamed through the grid in blocks of ``bp``. Each
+block gathers its rows, counts the contiguous valid multipath slots, and
+selects a slot by hash — the fused lookup+hash+select the fabric simulator
+performs every slice.
+
+Adaptation note (DESIGN.md §2): P4 does one packet per pipeline stage at
+line rate; the TPU-native formulation is wide SIMD gather over a packet
+vector, which is how the JAX fabric consumes it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tbl_next_ref, tbl_dep_ref, node_ref, dst_ref, hash_ref,
+            nxt_ref, dep_ref, *, K: int):
+    tbl_next = tbl_next_ref[...]            # [N, D, K] (VMEM resident)
+    tbl_dep = tbl_dep_ref[...]
+    node = node_ref[...]                    # [bp]
+    dst = dst_ref[...]
+    hashv = hash_ref[...]
+
+    rows_n = tbl_next[node, dst]            # [bp, K] vector gather
+    rows_d = tbl_dep[node, dst]
+    nvalid = jnp.sum((rows_n >= 0).astype(jnp.int32), axis=-1)
+    slot = (hashv % jnp.maximum(nvalid, 1).astype(jnp.uint32)).astype(jnp.int32)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, rows_n.shape, 1)
+              == slot[:, None])
+    nxt_ref[...] = jnp.sum(jnp.where(onehot, rows_n, 0), axis=-1)
+    dep_ref[...] = jnp.sum(jnp.where(onehot, rows_d, 0), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def time_flow_lookup(tbl_next, tbl_dep, node, dst, hashv, *, bp: int = 1024,
+                     interpret: bool = True):
+    """tbl_*: [N, D, K] int32 (this slice's tables); node/dst: [P] int32;
+    hashv: [P] uint32. Returns (next_hop [P], dep_offset [P])."""
+    N, D, K = tbl_next.shape
+    P = node.shape[0]
+    bp = min(bp, P)
+    assert P % bp == 0, (P, bp)
+    grid = (P // bp,)
+    nxt, dep = pl.pallas_call(
+        functools.partial(_kernel, K=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N, D, K), lambda i: (0, 0, 0)),
+            pl.BlockSpec((N, D, K), lambda i: (0, 0, 0)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P,), jnp.int32),
+            jax.ShapeDtypeStruct((P,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tbl_next, tbl_dep, node, dst, hashv)
+    return nxt, dep

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count on first backend initialisation. Everything else follows.
+
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.models import count_params, model_flops
+from repro.models.config import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_serve_step, make_train_step,
+                                make_prefill_step, shape_supported,
+                                state_specs)
+from repro.launch.hlo import analyze_hlo, roofline_terms, HW
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        frontend_sharding, param_shardings,
+                                        opt_state_shardings, replicated)
+
+
+def _cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        out = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               donate: bool = True, extra_flags: dict | None = None,
+               variant: str = "opt", overrides: dict | None = None):
+    """Lower + compile one (arch x shape x mesh) cell; returns result dict.
+
+    variant "naive" reproduces the paper-faithful first-cut baseline
+    (materialised attention, no remat, unchunked MoE); "opt" is the shipped
+    configuration. ``overrides`` applies arbitrary ArchConfig replacements
+    on top (hillclimb knobs)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if variant == "naive":
+        cfg = _dc.replace(cfg, remat="none", attn_impl="naive", moe_chunk=0,
+                          train_microbatches=1, fsdp=False)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    specs = input_specs(cfg, shape)
+    params_s, opt_s = state_specs(cfg)
+    p_sh = param_shardings(params_s, mesh, cfg)
+
+    with jax.sharding.set_mesh(mesh):
+        if shape.kind == "train":
+            from repro.distributed.sharding import data_axes
+            step = make_train_step(cfg, dp_axes=data_axes(mesh))
+            o_sh = opt_state_shardings(p_sh, params_s)
+            b_sh = batch_shardings(mesh, shape.global_batch)
+            batch = {"tokens": specs["tokens"], "labels": specs["labels"]}
+            bsh = {"tokens": b_sh["tokens"], "labels": b_sh["labels"]}
+            if "frontend_embeds" in specs:
+                batch["frontend_embeds"] = specs["frontend_embeds"]
+                bsh["frontend_embeds"] = frontend_sharding(mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, bsh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_s, opt_s, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            c_sh = cache_shardings(specs["cache"], mesh, cfg,
+                                   shape.global_batch)
+            b_sh = batch_shardings(mesh, shape.global_batch)
+            batch = dict(specs)
+            bsh = {"tokens": b_sh["tokens"], "cache": c_sh}
+            if "frontend_embeds" in specs:
+                bsh["frontend_embeds"] = frontend_sharding(mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, bsh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_s, batch)
+        else:  # decode
+            step = make_serve_step(cfg)
+            c_sh = cache_shardings(specs["cache"], mesh, cfg,
+                                   shape.global_batch)
+            tok_sh = batch_shardings(mesh, shape.global_batch)["tokens"]
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
+                out_shardings=(tok_sh, c_sh),
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_s, specs["token"], specs["cache"],
+                                   specs["index"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = _cost_dict(compiled)
+    mem = _memory_dict(compiled)
+    hlo = analyze_hlo(compiled.as_text())
+    n_active = count_params(cfg, active=True)
+    mf = model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+
+    # analyze_hlo reports the per-device partitioned module with while-loop
+    # trip counts applied (XLA's own cost_analysis counts loop bodies once —
+    # its raw numbers are kept for reference)
+    terms = roofline_terms(hlo.flops, hlo.bytes, hlo.collective_bytes)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo": {"flops_per_device": hlo.flops,
+                "bytes_per_device": hlo.bytes,
+                "collective_bytes_per_device": hlo.collective_bytes,
+                "collectives_by_kind": hlo.collectives_by_kind,
+                "collective_ops": hlo.collective_ops},
+        "cost_analysis_raw": cost,
+        "memory_analysis": mem,
+        "params": count_params(get_config(arch)),
+        "params_active": n_active,
+        "model_flops": mf,
+        "model_flops_per_device": mf / n_dev,
+        "roofline": terms,
+        "useful_flops_ratio": (mf / n_dev) / hlo.flops if hlo.flops else None,
+        "variant": variant,
+    }
+    if extra_flags:
+        result.update(extra_flags)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--out-dir", default="artifacts/dryrun")
+    ap.add_argument("--variant", default="opt", choices=["opt", "naive"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out_dir, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    res = lower_cell(arch, shape, mp, variant=args.variant)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append(tag)
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "error": f"{type(e).__name__}: {e}"}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if "skipped" in res:
+                    print(f"  skipped: {res['skipped']}")
+                elif "error" in res:
+                    print(f"  ERROR: {res['error']}")
+                else:
+                    r = res["roofline"]
+                    print(f"  compile={res['compile_s']}s "
+                          f"flops/dev={res['hlo']['flops_per_device']:.3e} "
+                          f"coll/dev={res['hlo']['collective_bytes_per_device']:.3e}B "
+                          f"dominant={r['dominant']} bound={r['bound_s']:.2e}s")
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Post-SPMD HLO static analysis: FLOPs, HBM traffic, and collective bytes
+with while-loop trip-count weighting.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
+``while`` body ONCE, so a scanned-layers model under-reports by ~n_layers;
+and it has no collective accounting at all. This analyzer parses the
+optimized HLO text into a computation call graph, weights every computation
+by the product of its callers' ``known_trip_count``s, and accumulates:
+
+  flops            — dot ops: 2 * numel(result) * contracted-dim product
+                     (matmul-only by design; elementwise FLOPs are noise at
+                     these scales, and this matches MODEL_FLOPS semantics)
+  bytes            — per-instruction operand+result sizes (the same traffic
+                     model HloCostAnalysis uses), counting fusions at their
+                     boundary only
+  collective bytes — operand sizes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute,
+                     derived from result shapes + op semantics
+
+All values are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats", "roofline_terms", "HW"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# one full shape token: dtype[dims]{layout}?  (layout may contain T(...) etc)
+_SHAPE_TOK = r"[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\(.*?\)|" + _SHAPE_TOK + r")\s*"
+    r"(?P<op>[\w\-]+)\((?P<args>.*?)\)(?P<rest>.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%(?P<name>[\w.\-]+)\s*\(")
+_SHAPE_ONLY = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_ONE = re.compile(
+    r"(body|condition|calls|to_apply)=%?([\w.\-]+)")
+_CALLED_MANY = re.compile(
+    r"(branch_computations|called_computations)=\{([^}]*)\}")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_ONLY.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_dims(type_str: str) -> list[int]:
+    m = _SHAPE_ONLY.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collectives_by_kind: dict
+    collective_ops: int
+    computations: int
+    unrolled_equiv_instructions: float
+
+
+def _group_size(rest: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    comps: dict[str, dict] = {}
+    cur = None
+    shapes: dict[str, str] = {}
+
+    for raw in hlo_text.splitlines():
+        if raw and not raw[0].isspace():
+            m = _COMP_RE.match(raw)
+            if m:
+                cur = m.group("name")
+                comps[cur] = dict(flops=0.0, bytes=0.0, coll=[], edges=[],
+                                  n_instr=0, fusion_called=False)
+                shapes = {}
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(raw)
+        if not mi:
+            continue
+        name, type_str, op, args, rest = (mi.group("name"), mi.group("type"),
+                                          mi.group("op"), mi.group("args"),
+                                          mi.group("rest"))
+        shapes[name] = type_str
+        c = comps[cur]
+        c["n_instr"] += 1
+
+        # call graph edges
+        trip = 1
+        if op == "while":
+            mt = _TRIP_RE.search(rest)
+            trip = int(mt.group(1)) if mt else 1
+        for mc in _CALLED_ONE.finditer(rest):
+            kind, callee = mc.group(1), mc.group(2)
+            trip_edge = trip if kind == "body" else 1
+            c["edges"].append((callee, trip_edge,
+                               op == "fusion" and kind == "calls"))
+        for mc in _CALLED_MANY.finditer(rest):
+            for callee in re.split(r",\s*", mc.group(2)):
+                callee = callee.strip().lstrip("%")
+                if callee:
+                    c["edges"].append((callee, 1, False))
+
+        # flops: dot ops (also inside fusion computations)
+        if op == "dot":
+            dims = _result_dims(type_str)
+            k = 1
+            mlhs = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            arg_names = [a.strip().lstrip("%") for a in args.split(",")
+                         if a.strip()]
+            if mlhs and arg_names:
+                lhs_shape = shapes.get(arg_names[0], "")
+                ld = _result_dims(lhs_shape)
+                if mlhs.group(1):
+                    for ci in mlhs.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(ld):
+                            k *= ld[ci]
+            numel = 1
+            for d in dims:
+                numel *= d
+            c["flops"] += 2.0 * numel * k
+
+        # bytes: operands + result (fusion boundary only — instructions in
+        # fusion computations are skipped for bytes at aggregation time).
+        # In-place update ops only touch the updated region, matching
+        # HloCostAnalysis: DUS = 2x update, DS = 2x slice, gather = 2x
+        # result, scatter = 2x updates (XLA performs these in place).
+        if op not in _SKIP_BYTES_OPS:
+            arg_names = [a.strip().lstrip("%") for a in args.split(",")
+                         if a.strip()]
+            if op == "dynamic-update-slice":
+                upd = shapes.get(arg_names[1], "") if len(arg_names) > 1 else ""
+                b = 2 * _type_bytes(upd)
+            elif op in ("dynamic-slice", "gather", "slice"):
+                b = 2 * _type_bytes(type_str)
+            elif op == "scatter":
+                upd = shapes.get(arg_names[-1], "") if arg_names else ""
+                b = 2 * _type_bytes(upd) + _type_bytes(type_str)
+            else:
+                b = _type_bytes(type_str)
+                for a in arg_names:
+                    if a in shapes:
+                        b += _type_bytes(shapes[a])
+            c["bytes"] += b
+
+        # collectives
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES:
+            rb = _type_bytes(type_str)
+            g = _group_size(rest)
+            if base == "all-gather":
+                operand = rb / max(g, 1)
+            elif base == "reduce-scatter":
+                operand = rb * g
+            else:  # all-reduce, all-to-all, collective-permute: same size
+                operand = rb
+            c["coll"].append((base, operand))
+
+    # which computations are fusion bodies (exclude their bytes)
+    fusion_bodies = set()
+    for c in comps.values():
+        for callee, _, is_fusion in c["edges"]:
+            if is_fusion:
+                fusion_bodies.add(callee)
+
+    # propagate multipliers from entry; entry = last computation or the one
+    # nobody calls
+    called = {callee for c in comps.values() for callee, _, _ in c["edges"]}
+    entries = [n for n in comps if n not in called]
+    mult: dict[str, float] = defaultdict(float)
+    for e in entries:
+        mult[e] = 1.0
+    # topological-ish fixed point (call graphs are DAGs; iterate until stable)
+    for _ in range(len(comps)):
+        changed = False
+        new = defaultdict(float)
+        for e in entries:
+            new[e] = 1.0
+        for name, c in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for callee, w, _ in c["edges"]:
+                new[callee] += m * w
+        if dict(new) != dict(mult):
+            mult = new
+            changed = True
+        if not changed:
+            break
+
+    flops = byts = coll = 0.0
+    by_kind: dict[str, float] = defaultdict(float)
+    n_ops = 0
+    n_instr = 0.0
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += m * c["flops"]
+        if name not in fusion_bodies:
+            byts += m * c["bytes"]
+        for kind, ob in c["coll"]:
+            coll += m * ob
+            by_kind[kind] += m * ob
+            n_ops += 1
+        n_instr += m * c["n_instr"]
+    return HloStats(flops=flops, bytes=byts, collective_bytes=coll,
+                    collectives_by_kind=dict(by_kind), collective_ops=n_ops,
+                    computations=len(comps),
+                    unrolled_equiv_instructions=n_instr)
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e target (per §Roofline)."""
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_gb: float = 16.0
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   collective_bytes_per_device: float, hw: HW = HW()) -> dict:
+    """The three §Roofline terms in seconds (per device/chip)."""
+    terms = {"compute_s": flops_per_device / hw.peak_flops,
+             "memory_s": bytes_per_device / hw.hbm_bw,
+             "collective_s": collective_bytes_per_device / hw.ici_bw}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

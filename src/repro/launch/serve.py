@@ -1,0 +1,132 @@
+"""Batched serving driver: continuous-batching decode loop.
+
+Prefills a batch of prompts, then decodes with a simple continuous-batching
+scheduler: finished sequences (EOS or length budget) are immediately replaced
+by queued requests whose prompts are prefilled into the freed cache slots.
+Reports prefill and per-token decode latency/throughput.
+
+Example:
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --preset tiny \
+        --requests 12 --batch 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.stacks import frontend_dim
+
+__all__ = ["serve", "main"]
+
+
+def serve(arch: str = "olmo-1b", preset: str = "tiny", requests: int = 12,
+          batch: int = 4, prompt_len: int = 32, max_new: int = 16,
+          cache_len: int = 128, seed: int = 0, eos_id: int = 1) -> dict:
+    cfg = get_config(arch)
+    if preset == "tiny":
+        cfg = cfg.reduced(vocab=512)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    queue = [rng.integers(2, cfg.vocab, size=prompt_len).astype(np.int32)
+             for _ in range(requests)]
+
+    fe = None
+    if cfg.frontend is not None:
+        fe = jnp.asarray(rng.normal(size=(batch, cfg.frontend_tokens,
+                                          frontend_dim(cfg))), jnp.bfloat16)
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    # slot state
+    cache = model.init_cache(batch, cache_len,
+                             enc_len=cfg.frontend_tokens or None)
+    lengths = np.zeros(batch, np.int64)      # generated tokens per slot
+    active = np.zeros(batch, bool)
+    done, t_prefill, t_decode, n_decoded = 0, 0.0, 0.0, 0
+
+    def fill_slots(cache, tok):
+        nonlocal queue, t_prefill
+        for s in range(batch):
+            if not active[s] and queue:
+                prompt = queue.pop(0)
+                t0 = time.time()
+                # batched prefill of one slot: run prompt through full batch
+                # (per-slot prefill; production would batch these too)
+                toks = jnp.asarray(np.tile(prompt, (batch, 1)))
+                logits, new_cache = prefill(params, toks, cache, fe)
+                t_prefill += time.time() - t0
+                # merge only slot s of the refreshed cache
+                cache = jax.tree.map(
+                    lambda old, new: old.at[..., s:s+1, :, :, :].set(
+                        new[..., s:s+1, :, :, :])
+                    if old.ndim >= 4 else old, cache, new_cache)
+                tok = tok.at[s, 0].set(jnp.argmax(logits[s, -1]).astype(jnp.int32))
+                active[s] = True
+                lengths[s] = 0
+        return cache, tok
+
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    # initial batched prefill: all slots at once (the common fast path)
+    first = [queue.pop(0) for _ in range(min(batch, len(queue)))]
+    while len(first) < batch:
+        first.append(np.zeros(prompt_len, np.int32))
+    t0 = time.time()
+    toks = jnp.asarray(np.stack(first))
+    logits, cache = prefill(params, toks, cache, fe)
+    t_prefill += time.time() - t0
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    active[:] = True
+
+    pos = prompt_len
+    while (done < requests and (active.any() or queue)) and pos < cache_len - 1:
+        t0 = time.time()
+        logits, cache = decode(params, tok, cache, jnp.asarray(pos, jnp.int32), fe)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        t_decode += time.time() - t0
+        n_decoded += int(active.sum())
+        pos += 1
+        lengths[active] += 1
+        finished = active & ((np.asarray(tok[:, 0]) == eos_id) |
+                             (lengths >= max_new))
+        for s in np.nonzero(finished)[0]:
+            active[s] = False
+            done += 1
+        if queue.__len__() and (~active).any():
+            cache, tok = fill_slots(cache, tok)
+    return {
+        "requests_done": int(done),
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tokens": int(n_decoded),
+        "decode_tok_s": n_decoded / t_decode if t_decode else 0.0,
+        "ms_per_token": 1e3 * t_decode / max(n_decoded, 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+    out = serve(arch=args.arch, preset=args.preset, requests=args.requests,
+                batch=args.batch, prompt_len=args.prompt_len,
+                max_new=args.max_new, cache_len=args.cache_len)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

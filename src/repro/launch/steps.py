@@ -1,0 +1,155 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, no device allocation — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model, stacks
+from repro.models.config import ArchConfig, SHAPES, ShapeConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["input_specs", "make_train_step", "make_serve_step",
+           "make_prefill_step", "shape_supported", "state_specs"]
+
+
+def shape_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 524k-token decode is quadratic"
+    return True, ""
+
+
+def _frontend_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct | None:
+    if cfg.frontend is None:
+        return None
+    fd = stacks.frontend_dim(cfg)
+    return jax.ShapeDtypeStruct((batch, cfg.frontend_tokens, fd), jnp.bfloat16)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for this cell as ShapeDtypeStructs.
+
+    train/prefill: {tokens, labels?, frontend_embeds?}
+    decode: {token, cache, index, frontend_embeds?} — one new token against a
+    KV cache of shape.seq_len (decode_* lower serve_step, NOT train_step).
+    """
+    B, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        Lt = L - (cfg.frontend_tokens if (cfg.frontend and not cfg.enc_dec) else 0)
+        out = {"tokens": jax.ShapeDtypeStruct((B, Lt), i32),
+               "labels": jax.ShapeDtypeStruct((B, Lt), i32)}
+        fe = _frontend_spec(cfg, B)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+        return out
+    if shape.kind == "prefill":
+        Lt = L - (cfg.frontend_tokens if (cfg.frontend and not cfg.enc_dec) else 0)
+        out = {"tokens": jax.ShapeDtypeStruct((B, Lt), i32),
+               "cache": cache_specs(cfg, B, L)}
+        fe = _frontend_spec(cfg, B)
+        if fe is not None:
+            out["frontend_embeds"] = fe
+        return out
+    if shape.kind == "decode":
+        out = {"token": jax.ShapeDtypeStruct((B, 1), i32),
+               "cache": cache_specs(cfg, B, L),
+               "index": jax.ShapeDtypeStruct((), i32)}
+        return out
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct pytree matching stacks.init_cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: stacks.init_cache(cfg, batch, seq_len,
+                                  enc_len=cfg.frontend_tokens or None))
+
+
+def state_specs(cfg: ArchConfig, seed: int = 0):
+    """(params, opt_state) ShapeDtypeStructs via eval_shape — no allocation."""
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(seed)))
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig | None = None,
+                    dp_axes: tuple[str, ...] | None = None):
+    """``dp_axes``: the mesh axes that shard the batch — required when
+    train_microbatches > 1 so the stacked microbatch keeps its data sharding
+    (without the explicit constraint XLA loses the layout through the
+    reshape+scan and computes full-batch shapes inside the loop — measured
+    4x FLOPs waste; see EXPERIMENTS.md §Perf it4)."""
+    from jax.sharding import PartitionSpec as P
+
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    n_micro = max(1, cfg.train_microbatches)
+
+    def loss_of(p, batch):
+        return model.loss(p, batch["tokens"], batch["labels"],
+                          batch.get("frontend_embeds"))
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # in-step gradient accumulation (§Perf it4): activation memory
+            # scales with the microbatch, gradients accumulate in f32
+            B = batch["tokens"].shape[0]
+            mb = B // n_micro
+
+            def stack(x):
+                y = x.reshape((n_micro, mb) + x.shape[1:])
+                if dp_axes:
+                    spec = P(*((None, dp_axes) + (None,) * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(y, spec)
+                return y
+
+            stacked = jax.tree.map(stack, batch)
+
+            def body(acc, mbatch):
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                return (jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32) / n_micro,
+                                     acc[0], g),
+                        acc[1] + l / n_micro), None
+
+            zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                params)
+            (grads, loss), _ = jax.lax.scan(body, (zero, 0.0), stacked)
+        new_params, new_opt, metrics = adamw_update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch["tokens"], batch["cache"],
+                                      batch.get("frontend_embeds"))
+        return jnp.argmax(logits[:, -1], axis=-1), cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def serve_step(params, token, cache, index):
+        logits, cache = model.decode_step(params, token, cache, index)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step

@@ -1,0 +1,6 @@
+from .config import ArchConfig, MoEConfig, ShapeConfig, SHAPES
+from .model import Model, build_model, count_params, model_flops
+from . import layers, stacks
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES", "Model",
+           "build_model", "count_params", "model_flops", "layers", "stacks"]

@@ -1,0 +1,776 @@
+"""Model layers, pure-functional JAX (params = nested dicts of jnp arrays).
+
+These jnp implementations are the SPMD-partitionable reference path used by
+the dry-run and CPU tests; the Pallas TPU kernels in ``repro.kernels``
+implement the same math (flash attention, grouped MoE matmul, RG-LRU scan)
+and are validated against these functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+Params = dict
+
+
+def _dense_init(key, shape, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: int) -> Params:
+    if cfg.norm == "layernorm_np":      # olmo: non-parametric LN
+        return {}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, L, H, hd]; positions: [B, L] absolute token positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, L, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional local window / softcap / cross / cache)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AttnCache:
+    """KV cache. ``k``/``v``: [B, S_cache, Kv, hd]; ``pos``: [B, S_cache]
+    absolute positions (-1 = empty), enabling ring buffers for local layers."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def attn_init(key, cfg: ArchConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, hq * hd)),
+        "wk": _dense_init(ks[1], (d, hkv * hd)),
+        "wv": _dense_init(ks[2], (d, hkv * hd)),
+        "wo": _dense_init(ks[3], (hq * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attn_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+               positions: jnp.ndarray, causal: bool = True,
+               window: int = 0, cache: AttnCache | None = None,
+               write_index: jnp.ndarray | None = None,
+               kv_src: jnp.ndarray | None = None,
+               kv_positions: jnp.ndarray | None = None):
+    """General GQA attention.
+
+    x: [B, L, d]. ``kv_src`` (cross-attention) supplies K/V from encoder
+    output. With ``cache``, new K/V are written at ``write_index`` (modulo the
+    cache length — a ring buffer for local layers) and attention runs over the
+    cache. Returns (out, new_cache).
+    """
+    B, L, d = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    src = kv_src if kv_src is not None else x
+    q = (x @ p["wq"]).reshape(B, L, hq, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], hkv, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], hkv, hd)
+    if cfg.qk_norm:
+        q = _rms(q) * p["q_norm"]
+        k = _rms(k) * p["k_norm"]
+        q, k = q.astype(x.dtype), k.astype(x.dtype)
+    if kv_src is None:  # self-attention gets RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions if kv_positions is not None else positions,
+                 cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and L == 1:
+        # decode: ring-write the new KV at index % S, attend over the cache
+        S = cache.k.shape[1]
+        idx = (write_index % S).astype(jnp.int32)
+        k_full = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+        v_full = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+        pos_new = jax.lax.dynamic_update_slice(
+            cache.pos, positions.astype(jnp.int32), (0, idx))
+        new_cache = AttnCache(k_full, v_full, pos_new)
+        k, v, key_pos = k_full, v_full, pos_new
+    elif cache is not None:
+        # prefill: attend in-sequence; the last S positions land in the cache
+        S = cache.k.shape[1]
+        tail = min(S, L)
+        if S == L:
+            # identity layout: avoid the scatter entirely (it materialises an
+            # f32 full-cache temporary and, with a model-sharded cache dim,
+            # an all-reduce per layer)
+            new_cache = AttnCache(k, v, positions.astype(jnp.int32))
+        elif S <= L:
+            # ring cache smaller than the sequence: last S positions, and
+            # position p lives in slot p % S — a roll of the tail
+            kt, vt = k[:, -tail:], v[:, -tail:]
+            pt = positions[:, -tail:].astype(jnp.int32)
+            shift = jnp.asarray((L - tail) % S, jnp.int32)
+            new_cache = AttnCache(
+                jnp.roll(kt, shift, axis=1), jnp.roll(vt, shift, axis=1),
+                jnp.roll(pt, shift, axis=1))
+        else:
+            slots = (jnp.arange(L, dtype=jnp.int32) % S)
+            new_cache = AttnCache(
+                cache.k.at[:, slots].set(k),
+                cache.v.at[:, slots].set(v),
+                cache.pos.at[:, slots].set(positions.astype(jnp.int32)))
+        key_pos = positions
+    else:
+        key_pos = kv_positions if kv_positions is not None else positions
+
+    scale = cfg.attn_scale_override or (1.0 / math.sqrt(hd))
+    g = hq // hkv
+    is_causal = causal and kv_src is None
+
+    if cfg.attn_impl == "chunked" and L > 1:
+        # flash-style chunked path (custom VJP): O(bq*bk) memory.
+        # Merged-head layout: q heads shard over model (padded if needed),
+        # expanded K/V replicate — every score block is shard-local even when
+        # kv_heads doesn't divide the TP size (Megatron GQA convention).
+        from .chunked_attention import chunked_attention
+        qc = jnp.moveaxis(q, 1, 2)                       # [B, Hq, L, hd]
+        kc = jnp.repeat(jnp.moveaxis(k, 1, 2), g, axis=1)  # [B, Hq, S, hd]
+        vc = jnp.repeat(jnp.moveaxis(v, 1, 2), g, axis=1)
+        qc = _constrain(qc, lambda P, dp: P(dp, "model", None, None))
+        kc = _constrain(kc, lambda P, dp: P(dp, None, None, None))
+        vc = _constrain(vc, lambda P, dp: P(dp, None, None, None))
+        kp = key_pos.astype(jnp.int32)
+        bq, bk = cfg.attn_bq, cfg.attn_bk
+        while L % min(bq, L):
+            bq //= 2
+        S_len = kc.shape[2]
+        while S_len % min(bk, S_len):
+            bk //= 2
+        oc = chunked_attention(qc, kc, vc, positions.astype(jnp.int32), kp,
+                               is_causal, window, cfg.attn_softcap, scale,
+                               bq, bk)
+        out = jnp.moveaxis(oc, 1, 2).reshape(B, L, hq * hd)
+        return out @ p["wo"], new_cache
+
+    qg = q.reshape(B, L, hkv, g, hd)
+    logits = jnp.einsum("blkgd,bmkd->bkglm", qg, k).astype(jnp.float32) * scale
+    if cfg.attn_softcap > 0:
+        logits = jnp.tanh(logits / cfg.attn_softcap) * cfg.attn_softcap
+
+    mask = jnp.ones((B, 1, 1, L, k.shape[1]), bool)
+    qp = positions[:, None, None, :, None]
+    kp = key_pos[:, None, None, None, :]
+    if cache is not None:
+        mask &= kp >= 0  # empty cache slots
+    if is_causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkglm,bmkd->blkgd", w, v).reshape(B, L, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+def _rms(x):
+    xf = x.astype(jnp.float32)
+    return xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+
+
+def make_cache(cfg: ArchConfig, batch: int, seq_len: int, window: int = 0,
+               dtype=jnp.bfloat16) -> AttnCache:
+    S = min(seq_len, window) if window > 0 else seq_len
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    return AttnCache(
+        k=jnp.zeros((batch, S, hkv, hd), dtype),
+        v=jnp.zeros((batch, S, hkv, hd), dtype),
+        pos=jnp.full((batch, S), -1, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"w_gate": _dense_init(ks[0], (d, ff)),
+            "w_up": _dense_init(ks[1], (d, ff)),
+            "w_down": _dense_init(ks[2], (ff, d))}
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sorted capacity dispatch; EP shards the expert axis)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E), scale=0.02).astype(jnp.float32),
+        "w_gate": _dense_init(ks[1], (E, d, ff)),
+        "w_up": _dense_init(ks[2], (E, d, ff)),
+        "w_down": _dense_init(ks[3], (E, ff, d)),
+    }
+    if m.shared_d_ff:
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=m.shared_d_ff)
+    return p
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Token-sorted capacity-C dispatch: argsort assignments by expert, keep
+    the first C per expert, run the expert GLU as one batched einsum over the
+    (sharded) expert axis, and combine with router weights.
+
+    This is the jnp oracle; ``repro.kernels.grouped_matmul`` provides the
+    TPU kernel for the expert einsum.
+    """
+    m = cfg.moe
+    B, L, d = x.shape
+
+    mesh_axes = getattr(jax.sharding.get_abstract_mesh(), "axis_names", ())
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axes)
+    dp_size = 1
+    if dp:
+        am = jax.sharding.get_abstract_mesh()
+        dp_size = int(np.prod([am.shape[a] for a in dp])) if dp else 1
+
+    if "model" in mesh_axes and m.num_experts % _axis_size("model") == 0 \
+            and B % max(dp_size, 1) == 0 and L > 1:
+        # explicit expert parallelism (§Perf it8): shard_map keeps dispatch
+        # on each data shard, computes only the local expert block, and the
+        # combine is one bf16 psum of [B, L, d] over the model axis — the
+        # SPMD scatter/gather formulations all leaked gathers of the E*C
+        # buffer in forward or backward (measured; see EXPERIMENTS.md)
+        out = _moe_shard_map(p, x, cfg, dp)
+    elif L == 1:
+        # decode without a mesh: dispatch globally over the batch
+        out = _moe_dispatch(p, x.reshape(B, d), cfg).reshape(B, L, d)
+    else:
+        xr = x
+        if cfg.moe_chunk and L > cfg.moe_chunk and L % cfg.moe_chunk == 0:
+            nc = L // cfg.moe_chunk
+            xr = x.reshape(B * nc, cfg.moe_chunk, d)
+        out = _moe_dispatch_batched(p, xr, cfg).reshape(B, L, d)
+    if m.shared_d_ff:
+        out = out + mlp_apply(p["shared"], x, cfg)
+    return out
+
+
+def _axis_size(name: str) -> int:
+    am = jax.sharding.get_abstract_mesh()
+    try:
+        return int(am.shape[name])
+    except Exception:
+        return 1
+
+
+def _moe_shard_map(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                   dp: tuple[str, ...]) -> jnp.ndarray:
+    """Expert-parallel MoE under shard_map.
+
+    Per device: tokens of its data shard (replicated over model), expert
+    weights of its model shard. Dispatch/top-k/sort are local; the expert GLU
+    touches only local experts; partial token outputs psum over "model" in
+    bf16. Wire cost per layer = one [B/dp, L, d] all-reduce — identical to
+    the dense-TP MLP's activation reduction.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+
+    def local_moe(x_blk, router, wg, wu, wd):
+        Bl, L, d = x_blk.shape
+        El = wg.shape[0]
+        E, K = m.num_experts, m.top_k
+        e0 = jax.lax.axis_index("model") * El
+        logits = x_blk.astype(jnp.float32) @ router       # [Bl, L, E]
+        vals, idx = jax.lax.top_k(logits, K)
+        gates = jax.nn.softmax(vals, axis=-1)
+
+        ids = idx.reshape(Bl, L * K)
+        gate_flat = gates.reshape(Bl, L * K)
+        local = (ids >= e0) & (ids < e0 + El)
+        ids_l = jnp.where(local, ids - e0, El)            # El = trash expert
+        order = jnp.argsort(ids_l, axis=1, stable=True)
+        ids_s = jnp.take_along_axis(ids_l, order, axis=1)
+        gate_s = jnp.take_along_axis(gate_flat, order, axis=1)
+        tok_s = order // K
+        csum = jnp.broadcast_to(jnp.arange(1, L * K + 1, dtype=jnp.int32),
+                                (Bl, L * K))
+        is_start = jnp.concatenate(
+            [jnp.ones((Bl, 1), bool), ids_s[:, 1:] != ids_s[:, :-1]], axis=1)
+        start = jax.lax.cummax(jnp.where(is_start, csum - 1, -1), axis=1)
+        pos = csum - 1 - start
+        C = int(max(1, math.ceil(L * K / E * m.capacity_factor)))
+        keep = (pos < C) & (ids_s < El)
+        c_idx = jnp.where(keep, pos, C)
+        e_idx = jnp.where(keep, ids_s, El)
+        bi = jnp.arange(Bl, dtype=jnp.int32)[:, None]
+        gathered = jnp.take_along_axis(x_blk, tok_s[..., None], axis=1)
+        xe = jnp.zeros((Bl, El + 1, C + 1, d), x_blk.dtype).at[
+            bi, e_idx, c_idx].set(gathered)[:, :El, :C]
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jnp.einsum("becd,edf->becf", xe, wg)) * \
+            jnp.einsum("becd,edf->becf", xe, wu)
+        ye = jnp.einsum("becf,efd->becd", h, wd)          # [Bl, El, C, d]
+        tok3 = jnp.full((Bl, El + 1, C + 1), L, jnp.int32).at[
+            bi, e_idx, c_idx].set(tok_s)[:, :El, :C]
+        g3 = jnp.zeros((Bl, El + 1, C + 1), jnp.float32).at[
+            bi, e_idx, c_idx].set(jnp.where(keep, gate_s, 0.0))[:, :El, :C]
+        contrib = ye * g3[..., None].astype(ye.dtype)
+        out = jnp.zeros((Bl, L + 1, d), ye.dtype).at[
+            bi[:, :, None], tok3].add(contrib)[:, :L]
+        return jax.lax.psum(out.astype(jnp.bfloat16), "model")
+
+    fn = jax.shard_map(
+        local_moe,
+        in_specs=(P(dp if dp else None, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(dp if dp else None, None, None),
+        check_vma=False)
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"]).astype(x.dtype)
+
+
+def _constrain(x, spec_fn):
+    """Best-effort sharding constraint: tries the production mesh axis sets;
+    silently a no-op outside a mesh context (CPU unit tests)."""
+    from jax.sharding import PartitionSpec as P
+    for dp in (("pod", "data"), ("data",)):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec_fn(P, dp))
+        except Exception:
+            continue
+    return x
+
+
+def _moe_dispatch_batched(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Batched sorted capacity dispatch. x: [B, L, d] -> [B, L, d].
+
+    Every op is batched over B (argsort/cumsum/scatter along axis 1), so the
+    partitioner keeps dispatch on each row's data shard; xe is explicitly
+    constrained to (B: data, E: model) so the expert GLU einsum is computed
+    on (batch x expert) blocks — without the constraint XLA replicates the
+    batch across the data axis (measured 16x FLOPs waste; EXPERIMENTS §Perf).
+    """
+    m = cfg.moe
+    B, L, d = x.shape
+    E, K = m.num_experts, m.top_k
+    logits = x.astype(jnp.float32) @ p["router"]          # [B, L, E]
+    vals, idx = jax.lax.top_k(logits, K)                  # [B, L, K]
+    gates = jax.nn.softmax(vals, axis=-1)
+
+    ids = idx.reshape(B, L * K)
+    gate_flat = gates.reshape(B, L * K)
+    order = jnp.argsort(ids, axis=1, stable=True)         # [B, L*K]
+    ids_s = jnp.take_along_axis(ids, order, axis=1)
+    gate_s = jnp.take_along_axis(gate_flat, order, axis=1)
+    tok_s = order // K                                    # assignment -> token
+    csum = jnp.broadcast_to(jnp.arange(1, L * K + 1, dtype=jnp.int32),
+                            (B, L * K))
+    is_start = jnp.concatenate(
+        [jnp.ones((B, 1), bool), ids_s[:, 1:] != ids_s[:, :-1]], axis=1)
+    start = jax.lax.cummax(jnp.where(is_start, csum - 1, -1), axis=1)
+    pos_in_e = csum - 1 - start
+    C = int(max(1, math.ceil(L * K / E * m.capacity_factor)))
+    keep = pos_in_e < C
+
+    bi = jnp.arange(B, dtype=jnp.int32)[:, None]
+    gathered = jnp.take_along_axis(x, tok_s[..., None], axis=1)  # [B, L*K, d]
+    # scatter with E and C as separate dims: the expert axis stays sharded,
+    # so each model shard writes only its experts' slots (flattening E*C
+    # forces an all-gather of xe's gradient in backward — measured 20x
+    # collective cost)
+    c_idx = jnp.where(keep, pos_in_e, C)                  # C = trash column
+    xe = jnp.zeros((B, E, C + 1, d), x.dtype).at[bi, ids_s, c_idx].set(gathered)
+    xe = xe[:, :, :C]
+    xe = _constrain(xe, lambda P, dp: P(dp, "model", None, None))
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("becd,edf->becf", xe, p["w_gate"])) * \
+        jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])     # [B, E, C, d]
+    # combine via the slot-inverse map, keeping E unmerged so each model
+    # shard scatter-adds only its own experts' contributions and the final
+    # sum is one all-reduce of [B, L, d] — the EP combine at dense-TP cost
+    # (merging E*C re-gathers ye across shards: measured 7x collective blowup)
+    tok3 = jnp.full((B, E, C + 1), L, jnp.int32).at[bi, ids_s, c_idx].set(
+        tok_s)[:, :, :C]
+    g3 = jnp.zeros((B, E, C + 1), jnp.float32).at[bi, ids_s, c_idx].set(
+        jnp.where(keep, gate_s, 0.0))[:, :, :C]
+    contrib = ye * g3[..., None].astype(ye.dtype)
+    out = jnp.zeros((B, L + 1, d), ye.dtype).at[
+        jnp.arange(B, dtype=jnp.int32)[:, None, None], tok3].add(contrib)
+    out = _constrain(out[:, :L], lambda P, dp: P(dp, None, None))
+    return out
+
+
+def _moe_dispatch(p: Params, xt: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Sorted capacity dispatch for one token chunk. xt: [N, d] -> [N, d]."""
+    m = cfg.moe
+    N, d = xt.shape
+    E, K = m.num_experts, m.top_k
+    logits = (xt.astype(jnp.float32) @ p["router"])  # [N, E]
+    vals, idx = jax.lax.top_k(logits, K)             # [N, K]
+    gates = jax.nn.softmax(vals, axis=-1)            # normalise over top-k
+
+    ids = idx.reshape(-1)                             # [N*K]
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    gate_flat = gates.reshape(-1)
+    order = jnp.argsort(ids, stable=True)
+    ids_s, tok_s, gate_s = ids[order], tok[order], gate_flat[order]
+    # position within expert group
+    csum = jnp.arange(1, ids_s.shape[0] + 1, dtype=jnp.int32)
+    start = jax.lax.cummax(jnp.where(
+        jnp.concatenate([jnp.array([True]), ids_s[1:] != ids_s[:-1]]), csum - 1, -1))
+    pos_in_e = csum - 1 - start
+    C = int(max(1, math.ceil(N * K / E * m.capacity_factor)))
+    keep = pos_in_e < C
+    slot = jnp.where(keep, ids_s * C + pos_in_e, E * C)  # E*C = trash slot
+
+    xe = jnp.zeros((E * C + 1, d), xt.dtype).at[slot].set(xt[tok_s])
+    xe = xe[:-1].reshape(E, C, d)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # [E, C, d]
+    y_slots = jnp.concatenate([ye.reshape(E * C, d),
+                               jnp.zeros((1, d), ye.dtype)])
+    contrib = y_slots[slot] * gate_s[:, None].astype(ye.dtype)
+    return jnp.zeros((N, d), ye.dtype).at[tok_s].add(
+        jnp.where(keep[:, None], contrib, 0))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def rglru_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _dense_init(ks[0], (d, w)),
+        "w_gate_branch": _dense_init(ks[1], (d, w)),
+        "conv": _dense_init(ks[2], (cfg.conv_width, w), scale=0.1),
+        "w_a": _dense_init(ks[3], (w, w)),
+        "w_x": _dense_init(ks[4], (w, w)),
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # softplus(2) ~ healthy decay
+        "w_out": _dense_init(ks[5], (w, d)),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: [..., w] post-conv activations -> (a, gated_input) both f32."""
+    c = 8.0
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_x"].astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-8)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                state: jnp.ndarray | None = None, conv_state: jnp.ndarray | None = None):
+    """x: [B, L, d]. Full-sequence mode uses an associative scan (the linear
+    recurrence h_t = a_t h_{t-1} + b_t); single-step mode (L==1, state given)
+    does the O(1) decode update. Returns (out, (state, conv_state))."""
+    B, L, d = x.shape
+    u = x @ p["w_in"]                      # [B, L, w]
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    cw = cfg.conv_width
+    if state is None or L > 1:
+        # parallel associative scan, assumes zero initial state (prefill/train)
+        # causal temporal conv via shifted adds (width is small)
+        conv = jnp.zeros_like(u)
+        for i in range(cw):
+            shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :L]
+            conv = conv + shifted * p["conv"][cw - 1 - i]
+        a, b = _rglru_coeffs(p, conv)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = hh.astype(x.dtype)
+        new_state = hh[:, -1]
+        # last conv_width inputs become the decode-time conv state
+        new_conv = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))[:, L - 1:L - 1 + cw]
+    else:
+        # decode: roll conv state, apply conv, one recurrence step
+        conv_state = jnp.concatenate([conv_state[:, 1:], u], axis=1)  # [B, cw, w]
+        conv = jnp.einsum("bcw,cw->bw", conv_state, p["conv"])[:, None]
+        a, b = _rglru_coeffs(p, conv)
+        hh = a * state[:, None] + b
+        h = hh.astype(x.dtype)
+        new_state = hh[:, -1]
+        new_conv = conv_state
+    out = (h * gate) @ p["w_out"]
+    return out, (new_state, new_conv)
+
+
+def rglru_state(cfg: ArchConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return (jnp.zeros((batch, w), jnp.float32),
+            jnp.zeros((batch, cfg.conv_width, w), jnp.bfloat16))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    dp = int(d * cfg.proj_factor)
+    hd = dp // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": _dense_init(ks[0], (d, dp)),
+        "w_gate": _dense_init(ks[1], (d, dp)),
+        "wq": _dense_init(ks[2], (dp, dp)),
+        "wk": _dense_init(ks[3], (dp, dp)),
+        "wv": _dense_init(ks[4], (dp, dp)),
+        "w_if": _dense_init(ks[5], (dp, 2 * cfg.n_heads), scale=0.02).astype(jnp.float32),
+        "w_down": _dense_init(ks[6], (dp, d)),
+    }
+
+
+def mlstm_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *,
+                state=None):
+    """Matrix-memory LSTM (xLSTM). Full-sequence mode uses the stabilized
+    quadratic parallel form; decode (L==1 with state=(C, n, m)) is recurrent.
+    Returns (out, new_state)."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    up = x @ p["w_up"]
+    gate = jax.nn.silu(x @ p["w_gate"])
+    dp = up.shape[-1]
+    hd = dp // H
+    q = (up @ p["wq"]).reshape(B, L, H, hd)
+    k = (up @ p["wk"]).reshape(B, L, H, hd) / math.sqrt(hd)
+    v = (up @ p["wv"]).reshape(B, L, H, hd)
+    gifs = (up.astype(jnp.float32) @ p["w_if"]).reshape(B, L, H, 2)
+    i_pre, f_pre = gifs[..., 0], gifs[..., 1]
+    log_f = -jax.nn.softplus(-f_pre)  # log sigmoid
+
+    chunk = getattr(cfg, "mlstm_chunk", 0)
+    if L > 1 and chunk and L > chunk and L % chunk == 0:
+        # chunkwise form (§Perf cell D): O(L*c) memory instead of O(L^2) —
+        # intra-chunk quadratic + inter-chunk recurrent state, same stabilizer
+        # convention as the parallel/decode paths (so all three agree exactly)
+        h, new_state = _mlstm_chunkwise(
+            q, k, v, i_pre, log_f,
+            state if state is not None else mlstm_state_like(B, H, hd),
+            chunk)
+        if state is None:
+            new_state = None
+    elif state is None or L > 1:
+        # parallel (quadratic) form, assumes zero initial state
+        F = jnp.cumsum(log_f, axis=1)                       # [B, L, H]
+        Dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        Dmat = jnp.where(causal[None, :, :, None], Dmat, -jnp.inf)
+        m = jnp.max(Dmat, axis=2, keepdims=True)            # stabilizer
+        W = jnp.exp(Dmat - m)                                # [B, L, L, H]
+        scores = jnp.einsum("blhd,bshd->blsh", q, k).astype(jnp.float32)
+        Wqk = W * scores
+        num = jnp.einsum("blsh,bshd->blhd", Wqk.astype(x.dtype), v)
+        den = jnp.abs(jnp.sum(Wqk, axis=2))                 # [B, L, H]
+        h = num / jnp.maximum(den, 1.0)[..., None].astype(x.dtype)
+        new_state = None
+        if state is not None:
+            # prefill: materialise the recurrent state after the last token
+            m_last = jnp.max(
+                jnp.where(jnp.isneginf(Dmat[:, -1]), -1e30, Dmat[:, -1]),
+                axis=1)                                      # [B, H]
+            W_last = jnp.exp(Dmat[:, -1] - m_last[:, None, :])  # [B, L(s), H]
+            C_last = jnp.einsum("bsh,bshd,bshe->bhde",
+                                W_last, v.astype(jnp.float32),
+                                k.astype(jnp.float32))
+            n_last = jnp.einsum("bsh,bshd->bhd", W_last, k.astype(jnp.float32))
+            new_state = (C_last, n_last, m_last)
+    else:
+        C, n, mprev = state                                  # [B,H,hd,hd], [B,H,hd], [B,H]
+        i1, f1 = i_pre[:, 0], log_f[:, 0]                    # [B, H]
+        m_new = jnp.maximum(f1 + mprev, i1)
+        fw = jnp.exp(f1 + mprev - m_new)[..., None]
+        iw = jnp.exp(i1 - m_new)[..., None]
+        kh, vh, qh = k[:, 0], v[:, 0], q[:, 0]               # [B, H, hd]
+        C = fw[..., None] * C + iw[..., None] * jnp.einsum(
+            "bhd,bhe->bhde", vh.astype(jnp.float32), kh.astype(jnp.float32))
+        n = fw * n + iw * kh.astype(jnp.float32)
+        num = jnp.einsum("bhde,bhe->bhd", C, qh.astype(jnp.float32))
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh.astype(jnp.float32)))
+        h = (num / jnp.maximum(den, 1.0)[..., None]).astype(x.dtype)
+        h = h.reshape(B, 1, H, hd)
+        new_state = (C, n, m_new)
+    out = (h.reshape(B, L, dp) * gate) @ p["w_down"]
+    return out, new_state
+
+
+def mlstm_state(cfg: ArchConfig, batch: int):
+    dp = int(cfg.d_model * cfg.proj_factor)
+    hd = dp // cfg.n_heads
+    H = cfg.n_heads
+    return mlstm_state_like(batch, H, hd)
+
+
+def mlstm_state_like(batch: int, H: int, hd: int):
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -jnp.inf, jnp.float32))
+
+
+def _mlstm_chunkwise(q, k, v, i_pre, log_f, state, chunk: int):
+    """Chunkwise mLSTM: scan over chunks of ``chunk`` steps carrying the
+    stabilized recurrent state (C, n, m).
+
+    Per chunk (F = within-chunk cumulative log-forget):
+      intra: D[t,s] = F_t - F_s + i_s (causal), as the parallel form
+      inter: exponent b_t = F_t + m_prev rides the carried state
+      row stabilizer m_row = max(rowmax D, b); h = num / max(|den|, 1)
+      state: m' = max(F_c + m_prev, max_s(F_c - F_s + i_s)); C/n updated with
+      exponents relative to m'.
+    """
+    B, L, H, hd = q.shape
+    nc = L // chunk
+    split = lambda a: jnp.moveaxis(
+        a.reshape((B, nc, chunk) + a.shape[2:]), 1, 0)
+    qs, ks, vs = split(q), split(k), split(v)
+    is_, fs = split(i_pre), split(log_f)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+
+    def step(carry, xs_c):
+        C, n, m_prev = carry                                  # [B,H,hd,hd] ...
+        qc, kc, vc, ic, fc = xs_c                             # [B,c,H,(hd)]
+        F = jnp.cumsum(fc, axis=1)                            # [B,c,H]
+        D = F[:, :, None, :] - F[:, None, :, :] + ic[:, None, :, :]
+        D = jnp.where(causal, D, -jnp.inf)
+        b = F + m_prev[:, None, :]                            # [B,c,H]
+        m_row = jnp.maximum(jnp.max(D, axis=2), b)            # [B,c,H]
+        W = jnp.exp(D - m_row[:, :, None, :])                 # [B,c,c,H]
+        scores = jnp.einsum("blhd,bshd->blsh", qc, kc,
+                            preferred_element_type=jnp.float32)
+        Wqk = W * scores
+        winter = jnp.exp(b - m_row)                           # [B,c,H]
+        num = jnp.einsum("blsh,bshd->blhd", Wqk.astype(vc.dtype), vc) + \
+            (winter[..., None] *
+             jnp.einsum("bhde,blhe->blhd", C, qc.astype(jnp.float32))
+             ).astype(vc.dtype)
+        den = jnp.abs(jnp.sum(Wqk, axis=2) +
+                      winter * jnp.einsum("bhd,blhd->blh", n,
+                                          qc.astype(jnp.float32)))
+        h_c = num / jnp.maximum(den, 1.0)[..., None].astype(vc.dtype)
+
+        # carry the state past this chunk
+        Ftot = F[:, -1]                                       # [B,H]
+        decay = Ftot[:, None, :] - F + ic                     # [B,c,H]
+        m_new = jnp.maximum(Ftot + m_prev, jnp.max(decay, axis=1))
+        wstate = jnp.exp(decay - m_new[:, None, :])           # [B,c,H]
+        C_new = jnp.exp(Ftot + m_prev - m_new)[..., None, None] * C + \
+            jnp.einsum("bsh,bshd,bshe->bhde", wstate,
+                       vc.astype(jnp.float32), kc.astype(jnp.float32))
+        n_new = jnp.exp(Ftot + m_prev - m_new)[..., None] * n + \
+            jnp.einsum("bsh,bshd->bhd", wstate, kc.astype(jnp.float32))
+        return (C_new, n_new, m_new), h_c
+
+    (C, n, m), hs = jax.lax.scan(step, state, (qs, ks, vs, is_, fs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, H, hd)
+    return h, (C, n, m)
+
+
+def slstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        # input + recurrent projections for (i, f, z, o) gates
+        "w_x": _dense_init(ks[0], (d, 4 * d)),
+        "w_h": _dense_init(ks[1], (d, 4 * d), scale=0.02),
+        "w_ffn": mlp_init(ks[2], cfg, d_ff=max(1, int(d * 4 / 3))),
+    }
+
+
+def slstm_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig, *, state=None):
+    """Scalar-memory LSTM with exponential gating and hidden-state feedback —
+    inherently sequential, so full-sequence mode scans over time (the
+    architecture's own constraint; real deployments fuse this into a kernel).
+    Returns (out, new_state)."""
+    B, L, d = x.shape
+    wx = x @ p["w_x"]  # [B, L, 4d]
+
+    def cell(carry, wx_t):
+        c, n, h, m = carry
+        g = (wx_t + h.astype(x.dtype) @ p["w_h"]).astype(jnp.float32)
+        i_pre, f_pre, z, o = jnp.split(g, 4, axis=-1)
+        log_f = -jax.nn.softplus(-f_pre)
+        m_new = jnp.maximum(log_f + m, i_pre)
+        iw = jnp.exp(i_pre - m_new)
+        fw = jnp.exp(log_f + m - m_new)
+        c = fw * c + iw * jnp.tanh(z)
+        n = fw * n + iw
+        h_new = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    if state is None:
+        state = slstm_state(cfg, B)
+    carry, hs = jax.lax.scan(cell, state, jnp.swapaxes(wx, 0, 1))
+    h = jnp.swapaxes(hs, 0, 1).astype(x.dtype)  # [B, L, d]
+    out = h + mlp_apply(p["w_ffn"], h, cfg)
+    return out, carry
+
+
+def slstm_state(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -jnp.inf, jnp.float32))

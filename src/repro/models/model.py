@@ -1,0 +1,98 @@
+"""Model facade + analytic parameter accounting (roofline MODEL_FLOPS)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import stacks
+from .config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def init(self, rng) -> Any:
+        return stacks.init_params(rng, self.cfg)
+
+    def train_logits(self, params, tokens, frontend_embeds=None):
+        return stacks.train_logits(params, self.cfg, tokens, frontend_embeds)
+
+    def loss(self, params, tokens, labels, frontend_embeds=None):
+        return stacks.loss_fn(params, self.cfg, tokens, labels, frontend_embeds)
+
+    def init_cache(self, batch: int, seq_len: int, enc_len: int | None = None):
+        return stacks.init_cache(self.cfg, batch, seq_len, enc_len)
+
+    def prefill(self, params, tokens, cache, frontend_embeds=None):
+        return stacks.prefill(params, self.cfg, tokens, cache, frontend_embeds)
+
+    def decode_step(self, params, token, cache, index, frontend_embeds=None):
+        return stacks.decode_step(params, self.cfg, token, cache, index,
+                                  frontend_embeds)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    cfg.check()
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts
+# ---------------------------------------------------------------------------
+
+def _layer_params(kind: str, cfg: ArchConfig, active: bool) -> int:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv, ff = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    attn = d * (hq + 2 * hkv) * hd + hq * hd * d
+    mlp = 3 * d * ff
+    if kind in ("dense", "local", "global", "enc", "attn"):
+        return attn + mlp
+    if kind == "dec":
+        return 2 * attn + mlp
+    if kind == "moe":
+        m = cfg.moe
+        n_active = m.top_k if active else m.num_experts
+        experts = n_active * 3 * d * m.expert_d_ff
+        shared = 3 * d * m.shared_d_ff
+        return attn + d * m.num_experts + experts + shared
+    if kind == "rec":
+        w = cfg.lru_width or d
+        rg = 2 * d * w + cfg.conv_width * w + 2 * w * w + w + w * d
+        return rg + mlp
+    if kind == "mlstm":
+        dp = int(d * cfg.proj_factor)
+        return 2 * d * dp + 3 * dp * dp + dp * 2 * cfg.n_heads + dp * d
+    if kind == "slstm":
+        return 8 * d * d + 3 * d * int(d * 4 / 3)
+    raise ValueError(kind)
+
+
+def count_params(cfg: ArchConfig, active: bool = False) -> int:
+    """Analytic N (``active=True`` -> N_active for MoE 6*N_active*D FLOPs)."""
+    kinds = list(cfg.pattern) * cfg.n_groups + list(cfg.tail)
+    n = sum(_layer_params(k, cfg, active) for k in kinds)
+    n += cfg.vocab * cfg.d_model  # embedding
+    if not cfg.tie_embeddings:
+        n += cfg.vocab * cfg.d_model
+    if cfg.enc_dec:
+        n += cfg.n_enc_layers * _layer_params("enc", cfg, active)
+    if cfg.frontend is not None:
+        n += stacks.frontend_dim(cfg) * cfg.d_model
+    return int(n)
+
+
+def model_flops(cfg: ArchConfig, kind: str, seq_len: int, batch: int) -> float:
+    """MODEL_FLOPS per step: 6*N*D for training (fwd+bwd), 2*N*D for
+    prefill, 2*N_active*batch for one decode token (D = processed tokens)."""
+    n_active = count_params(cfg, active=True)
+    if kind == "train":
+        return 6.0 * n_active * seq_len * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * batch
+    if kind == "decode":
+        return 2.0 * n_active * batch
+    raise ValueError(kind)

@@ -1,0 +1,333 @@
+"""Model stacks: pattern-group ``lax.scan`` over layers.
+
+The layer sequence is ``pattern x n_groups + tail``. Parameters of each
+pattern position are stacked along a leading group axis and the stack is a
+single ``lax.scan`` — the compiled HLO contains one pattern-group body
+regardless of depth (critical for 512-device dry-run compile times).
+
+Three entry points share the same layer code:
+  ``train_logits``  — full-sequence causal forward (no cache)
+  ``prefill``       — full-sequence forward that also fills caches
+  ``decode_step``   — one token against the caches / recurrent states
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as ly
+from .config import ArchConfig
+
+ATTN_KINDS = {"dense", "local", "global", "moe", "attn", "enc", "dec"}
+
+
+def _kindpos(cfg: ArchConfig) -> list[tuple[str, str]]:
+    return [(f"{k}{i}", k) for i, k in enumerate(cfg.pattern)]
+
+
+def _tail_kindpos(cfg: ArchConfig) -> list[tuple[str, str]]:
+    return [(f"tail_{k}{i}", k) for i, k in enumerate(cfg.tail)]
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, kind: str, cfg: ArchConfig) -> ly.Params:
+    ks = jax.random.split(key, 4)
+    p: ly.Params = {"norm1": ly.norm_init(cfg, cfg.d_model)}
+    if kind in ("dense", "local", "global", "enc", "attn"):
+        p["attn"] = ly.attn_init(ks[0], cfg)
+        p["norm2"] = ly.norm_init(cfg, cfg.d_model)
+        p["mlp"] = ly.mlp_init(ks[1], cfg)
+    elif kind == "moe":
+        p["attn"] = ly.attn_init(ks[0], cfg)
+        p["norm2"] = ly.norm_init(cfg, cfg.d_model)
+        p["moe"] = ly.moe_init(ks[1], cfg)
+    elif kind == "dec":
+        p["attn"] = ly.attn_init(ks[0], cfg)
+        p["norm_x"] = ly.norm_init(cfg, cfg.d_model)
+        p["xattn"] = ly.attn_init(ks[1], cfg, cross=True)
+        p["norm2"] = ly.norm_init(cfg, cfg.d_model)
+        p["mlp"] = ly.mlp_init(ks[2], cfg)
+    elif kind == "rec":
+        p["rglru"] = ly.rglru_init(ks[0], cfg)
+        p["norm2"] = ly.norm_init(cfg, cfg.d_model)
+        p["mlp"] = ly.mlp_init(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = ly.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["slstm"] = ly.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _layer_apply(kind: str, p: ly.Params, x, cfg: ArchConfig, ctx: dict,
+                 cache: Any | None):
+    """Returns (x, new_cache)."""
+    pos = ctx["positions"]
+    nc = cache
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind in ("local", "attn") else 0
+        causal = kind != "enc"
+        y, nc = ly.attn_apply(
+            p["attn"], ly.norm_apply(cfg, p["norm1"], x), cfg,
+            positions=pos, causal=causal, window=window,
+            cache=cache, write_index=ctx.get("write_index"))
+        x = x + y
+        if kind == "dec" and ctx.get("enc_out") is not None:
+            y, _ = ly.attn_apply(
+                p["xattn"], ly.norm_apply(cfg, p["norm_x"], x), cfg,
+                positions=pos, causal=False,
+                kv_src=ctx["enc_out"], kv_positions=ctx["enc_positions"])
+            x = x + y
+        h = ly.norm_apply(cfg, p["norm2"], x)
+        x = x + (ly.moe_apply(p["moe"], h, cfg) if kind == "moe"
+                 else ly.mlp_apply(p["mlp"], h, cfg))
+    elif kind == "rec":
+        y, nc = ly.rglru_apply(
+            p["rglru"], ly.norm_apply(cfg, p["norm1"], x), cfg,
+            state=None if cache is None else cache[0],
+            conv_state=None if cache is None else cache[1])
+        x = x + y
+        x = x + ly.mlp_apply(p["mlp"], ly.norm_apply(cfg, p["norm2"], x), cfg)
+    elif kind == "mlstm":
+        y, nc = ly.mlstm_apply(p["mlstm"], ly.norm_apply(cfg, p["norm1"], x),
+                               cfg, state=cache)
+        x = x + y
+    elif kind == "slstm":
+        y, nc = ly.slstm_apply(p["slstm"], ly.norm_apply(cfg, p["norm1"], x),
+                               cfg, state=cache)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    return x, nc
+
+
+def _layer_cache(kind: str, cfg: ArchConfig, batch: int, seq_len: int):
+    """Decode-time cache/state for one layer (None for stateless train)."""
+    if kind in ("dense", "global", "moe", "dec", "enc"):
+        return ly.make_cache(cfg, batch, seq_len)
+    if kind in ("local", "attn"):
+        return ly.make_cache(cfg, batch, seq_len, window=cfg.window)
+    if kind == "rec":
+        return ly.rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return ly.mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return ly.slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> ly.Params:
+    cfg.check()
+    keys = jax.random.split(key, 8)
+    p: ly.Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(jnp.bfloat16),
+        "final_norm": ly.norm_init(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ly._dense_init(keys[1], (cfg.d_model, cfg.vocab))
+
+    def stacked(key, kind):
+        ks = jax.random.split(key, cfg.n_groups)
+        return jax.vmap(lambda k: _layer_init(k, kind, cfg))(ks)
+
+    gk = jax.random.split(keys[2], len(cfg.pattern))
+    p["groups"] = {kp: stacked(gk[i], kind)
+                   for i, (kp, kind) in enumerate(_kindpos(cfg))}
+    tk = jax.random.split(keys[3], max(len(cfg.tail), 1))
+    p["tail"] = {kp: _layer_init(tk[i], kind, cfg)
+                 for i, (kp, kind) in enumerate(_tail_kindpos(cfg))}
+    if cfg.enc_dec:
+        ek = jax.random.split(keys[4], 2)
+        enc_groups = cfg.n_enc_layers
+        ks = jax.random.split(ek[0], enc_groups)
+        p["enc_groups"] = {"enc0": jax.vmap(
+            lambda k: _layer_init(k, "enc", cfg))(ks)}
+        p["enc_final_norm"] = ly.norm_init(cfg, cfg.d_model)
+    if cfg.frontend is not None:
+        fd = frontend_dim(cfg)
+        p["frontend_proj"] = ly._dense_init(keys[5], (fd, cfg.d_model))
+    return p
+
+
+def frontend_dim(cfg: ArchConfig) -> int:
+    return 512 if cfg.frontend == "audio" else 1024
+
+
+def _run_groups(groups_params, x, cfg: ArchConfig, ctx, caches, kps=None):
+    """Scan over pattern-groups; with caches, they ride along as scan xs/ys."""
+    kps = kps if kps is not None else _kindpos(cfg)
+
+    def body(x, inp):
+        params_g, cache_g = inp
+        new_c = {}
+        for kp, kind in kps:
+            x, nc = _layer_apply(kind, params_g[kp], x, cfg, ctx,
+                                 None if cache_g is None else cache_g[kp])
+            if nc is not None:
+                new_c[kp] = nc
+        return x, (new_c if new_c else None)
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body)
+    x, new_caches = jax.lax.scan(body, x, (groups_params, caches))
+    return x, new_caches
+
+
+def _run_tail(tail_params, x, cfg: ArchConfig, ctx, caches):
+    new_c = {}
+    for kp, kind in _tail_kindpos(cfg):
+        x, nc = _layer_apply(kind, tail_params[kp], x, cfg, ctx,
+                             None if caches is None else caches[kp])
+        if nc is not None:
+            new_c[kp] = nc
+    return x, (new_c if new_c else None)
+
+
+def _embed(p, cfg: ArchConfig, tokens, frontend_embeds=None):
+    x = p["embed"][tokens]
+    if cfg.frontend is not None and frontend_embeds is not None and not cfg.enc_dec:
+        fx = frontend_embeds.astype(x.dtype) @ p["frontend_proj"]
+        x = jnp.concatenate([fx, x], axis=1)
+    if cfg.name.startswith(("gemma2", "recurrentgemma")):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _logits(p, cfg: ArchConfig, x):
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    # shard the vocab dim even when it doesn't divide (XLA pads): without
+    # this, non-divisible vocabs (granite 49155, seamless 256206) replicate
+    # full f32 logits per device — measured 8.4 GB a piece on seamless
+    from .layers import _constrain
+    return _constrain(logits, lambda P, dp: P(dp, None, "model"))
+
+
+def _encoder(p, cfg: ArchConfig, frontend_embeds):
+    """Encoder for enc-dec models: frontend stub embeddings -> memory."""
+    fx = frontend_embeds.astype(jnp.bfloat16) @ p["frontend_proj"]
+    B, Le, _ = fx.shape
+    pos = jnp.broadcast_to(jnp.arange(Le, dtype=jnp.int32), (B, Le))
+    ctx = dict(positions=pos)
+    x, _ = _run_groups(p["enc_groups"], fx, cfg, ctx, None,
+                       kps=[("enc0", "enc")])
+    return ly.norm_apply(cfg, p["enc_final_norm"], x), pos
+
+
+def _full_forward(p, cfg: ArchConfig, tokens, frontend_embeds, caches,
+                  write_index):
+    B, L = tokens.shape
+    x = _embed(p, cfg, tokens, frontend_embeds)
+    Lx = x.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(Lx, dtype=jnp.int32), (B, Lx))
+    ctx = dict(positions=pos, write_index=write_index)
+    if cfg.enc_dec:
+        enc_out, enc_pos = _encoder(p, cfg, frontend_embeds)
+        ctx["enc_out"], ctx["enc_positions"] = enc_out, enc_pos
+    x, gc = _run_groups(p["groups"], x, cfg, ctx, caches and caches["groups"])
+    x, tc = _run_tail(p["tail"], x, cfg, ctx, caches and caches["tail"])
+    x = ly.norm_apply(cfg, p["final_norm"], x)
+    new_caches = None if caches is None else {"groups": gc, "tail": tc}
+    if caches is not None and cfg.enc_dec:
+        # decode steps reuse the encoder memory instead of re-encoding
+        new_caches["enc_out"] = ctx["enc_out"]
+        new_caches["enc_positions"] = ctx["enc_positions"]
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def train_logits(p, cfg: ArchConfig, tokens, frontend_embeds=None):
+    x, _ = _full_forward(p, cfg, tokens, frontend_embeds, None, None)
+    return _logits(p, cfg, x)
+
+
+def loss_fn(p, cfg: ArchConfig, tokens, labels, frontend_embeds=None):
+    """Next-token cross entropy; labels = tokens shifted by caller, -100 pads
+    ignored. Frontend positions carry no loss."""
+    logits = train_logits(p, cfg, tokens, frontend_embeds)
+    if logits.shape[1] != labels.shape[1]:  # frontend prefix: score text tail
+        logits = logits[:, -labels.shape[1]:]
+    valid = labels >= 0
+    lab = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: a gather over the
+    # (model-)sharded vocab dim would all-gather the full f32 logits per
+    # device (measured 8.4 GB x live-range on seamless); the one-hot multiply
+    # reduces shard-locally
+    from .layers import _constrain
+    onehot = jax.nn.one_hot(lab, logits.shape[-1], dtype=logp.dtype)
+    onehot = _constrain(onehot, lambda P, dp: P(dp, None, "model"))
+    nll = -jnp.sum(logp * onehot, axis=-1)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               enc_len: int | None = None):
+    """Stacked decode caches: group caches have a leading [n_groups] axis.
+    Enc-dec models also carry the encoder memory (filled by prefill)."""
+    def one(kind):
+        return _layer_cache(kind, cfg, batch, seq_len)
+
+    groups = {}
+    for kp, kind in _kindpos(cfg):
+        c = one(kind)
+        groups[kp] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape).copy(), c)
+    tail = {kp: one(kind) for kp, kind in _tail_kindpos(cfg)}
+    cache = {"groups": groups, "tail": tail if tail else None}
+    if cfg.enc_dec:
+        Le = enc_len or cfg.frontend_tokens
+        cache["enc_out"] = jnp.zeros((batch, Le, cfg.d_model), jnp.bfloat16)
+        cache["enc_positions"] = jnp.broadcast_to(
+            jnp.arange(Le, dtype=jnp.int32), (batch, Le))
+    return cache
+
+
+def prefill(p, cfg: ArchConfig, tokens, cache, frontend_embeds=None):
+    """Full-sequence forward filling caches; returns (last-token logits, cache)."""
+    x, new_caches = _full_forward(p, cfg, tokens, frontend_embeds, cache,
+                                  jnp.zeros((), jnp.int32))
+    return _logits(p, cfg, x[:, -1:]), new_caches
+
+
+def decode_step(p, cfg: ArchConfig, token, cache, index, frontend_embeds=None):
+    """One decode step: token [B, 1] at absolute position ``index`` (scalar).
+    Returns (logits [B, 1, V], new cache)."""
+    B = token.shape[0]
+    x = p["embed"][token]
+    if cfg.name.startswith(("gemma2", "recurrentgemma")):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pos = jnp.broadcast_to(index.astype(jnp.int32), (B, 1))
+    ctx = dict(positions=pos, write_index=index.astype(jnp.int32))
+    if cfg.enc_dec:
+        if "enc_out" in cache:  # cached by prefill
+            ctx["enc_out"] = cache["enc_out"]
+            ctx["enc_positions"] = cache["enc_positions"]
+        else:
+            ctx["enc_out"], ctx["enc_positions"] = _encoder(p, cfg, frontend_embeds)
+    x, gc = _run_groups(p["groups"], x, cfg, ctx, cache["groups"])
+    x, tc = _run_tail(p["tail"], x, cfg, ctx, cache["tail"])
+    x = ly.norm_apply(cfg, p["final_norm"], x)
+    new_cache = {"groups": gc, "tail": tc}
+    if cfg.enc_dec and "enc_out" in cache:
+        new_cache["enc_out"] = cache["enc_out"]
+        new_cache["enc_positions"] = cache["enc_positions"]
+    return _logits(p, cfg, x), new_cache

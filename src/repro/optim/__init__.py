@@ -1,0 +1,10 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                    linear_schedule, clip_by_global_norm, global_norm,
+                    accum_init, accum_add, accum_finalize)
+from .compression import (CompressionConfig, ef_init, compress, decompress,
+                          compressed_bytes, ef_roundtrip)
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_schedule", "clip_by_global_norm", "global_norm",
+           "accum_init", "accum_add", "accum_finalize",
+           "CompressionConfig", "ef_init", "compress", "decompress",
+           "compressed_bytes", "ef_roundtrip"]

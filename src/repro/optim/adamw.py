@@ -1,0 +1,111 @@
+"""AdamW + schedules + global-norm clipping + microbatch accumulation.
+
+Pure-functional (state in, state out); optimizer state inherits the sharding
+of its parameter, so FSDP/TP placement falls out of the param shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_schedule", "clip_by_global_norm", "global_norm",
+           "accum_init", "accum_add", "accum_finalize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"    # cosine | linear | const
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def linear_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * (1 - prog)
+
+
+def _lr(cfg: AdamWConfig, step):
+    if cfg.schedule == "cosine":
+        return cosine_schedule(cfg, step)
+    if cfg.schedule == "linear":
+        return linear_schedule(cfg, step)
+    return jnp.asarray(cfg.lr)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), n
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = _lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, n):
+        mh = m / bc1
+        nh = n / bc2
+        u = mh / (jnp.sqrt(nh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# -- microbatch gradient accumulation ---------------------------------------
+
+def accum_init(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def accum_add(acc, grads):
+    return jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+
+
+def accum_finalize(acc, n_micro: int):
+    return jax.tree.map(lambda a: a / n_micro, acc)

@@ -1,0 +1,95 @@
+"""Gradient compression for the optically-switched pod axis.
+
+Inter-pod gradient all-reduce is the dominant optical-fabric traffic of the
+training workload (DESIGN.md §3). Two standard compressors with error
+feedback, plus byte accounting consumed by the collective cost model:
+
+  int8    — per-tensor symmetric quantisation (4x over f32, 2x over bf16)
+  topk    — magnitude top-k sparsification (values + int32 indices)
+
+Error feedback keeps the residual locally and re-injects it next step, the
+convergence-preserving trick from 1-bit SGD / EF-SGD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionConfig", "ef_init", "compress", "decompress",
+           "compressed_bytes", "ef_roundtrip"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"            # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+def ef_init(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def _q_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _q_topk(x, frac):
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    return (sel, idx.astype(jnp.int32), x.shape), None
+
+
+def _dq_topk(payload):
+    sel, idx, shape = payload
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    return flat.at[idx].set(sel).reshape(shape)
+
+
+def compress(g: jnp.ndarray, err: jnp.ndarray, cfg: CompressionConfig):
+    """Returns (payload, new_err). ``payload`` decompresses to ~(g + err)."""
+    x = g.astype(jnp.float32) + err
+    if cfg.kind == "int8":
+        q, scale = _q_int8(x)
+        rec = _dq_int8(q, scale)
+        return (q, scale), x - rec
+    if cfg.kind == "topk":
+        payload, _ = _q_topk(x, cfg.topk_frac)
+        rec = _dq_topk(payload)
+        return payload, x - rec
+    return x, jnp.zeros_like(x)
+
+
+def decompress(payload, cfg: CompressionConfig) -> jnp.ndarray:
+    if cfg.kind == "int8":
+        return _dq_int8(*payload)
+    if cfg.kind == "topk":
+        return _dq_topk(payload)
+    return payload
+
+
+def ef_roundtrip(g, err, cfg: CompressionConfig):
+    """compress+decompress in one step (what the pod all-reduce applies)."""
+    payload, new_err = compress(g, err, cfg)
+    return decompress(payload, cfg), new_err
+
+
+def compressed_bytes(n_elems: int, cfg: CompressionConfig,
+                     raw_dtype_bytes: int = 4) -> int:
+    """Bytes on the wire per tensor of ``n_elems`` (cost-model input)."""
+    if cfg.kind == "int8":
+        return n_elems + 4
+    if cfg.kind == "topk":
+        k = max(1, int(n_elems * cfg.topk_frac))
+        return k * (4 + 4)
+    return n_elems * raw_dtype_bytes

@@ -1,0 +1,162 @@
+"""Fabric simulator tests (paper §5): calendar-queue semantics, congestion
+detection, push-back, offloading, conservation."""
+import numpy as np
+import pytest
+
+from repro.core import (FabricConfig, FabricTables, Workload, direct, hoho,
+                        round_robin, simulate, synthesize, ucmp, vlb)
+from repro.core.net import OpenOpticsNet, clos_routing
+from repro.core.routing import _time_dp, _dp_B
+
+N = 6
+
+
+def _one_packet(src, dst, t=0, size=1000):
+    return Workload(src=np.array([src], np.int32), dst=np.array([dst], np.int32),
+                    size=np.array([size], np.int32), t_inject=np.array([t], np.int32),
+                    flow=np.array([0], np.int32), seq=np.array([0], np.int32),
+                    is_eleph=np.array([False]))
+
+
+def _run(sched, routing, wl, cfg=None, slices=40):
+    tables = FabricTables.build(sched, routing)
+    return simulate(tables, wl, cfg or FabricConfig(slice_bytes=10_000), slices)
+
+
+def test_single_packet_direct_waits_for_circuit():
+    sched = round_robin(N, 1)
+    wl = _one_packet(0, 3, t=0)
+    res = _run(sched, direct(sched), wl)
+    t = int(res.t_deliver[0])
+    assert t >= 0
+    assert sched.has_circuit(0, 3, t)  # delivered exactly over the circuit
+
+
+def test_hoho_delivery_matches_dp_prediction():
+    """The fabric executes the time-flow tables faithfully: with rotor
+    semantics (one hop per slice) a lone packet's delivery slice equals the
+    DP's earliest-arrival slice exactly; with cut-through chaining enabled
+    (Opera semantics) it can only improve."""
+    sched = round_robin(N, 1)
+    r = hoho(sched)
+    rotor = FabricConfig(slice_bytes=10_000, hops_per_slice=1)
+    chained = FabricConfig(slice_bytes=10_000, hops_per_slice=4)
+    for src in range(N):
+        for dst in range(N):
+            if src == dst:
+                continue
+            wl = _one_packet(src, dst, t=0)
+            cost, H = _time_dp(sched, dst, 4)
+            B = _dp_B(sched, 4)
+            predicted = int(cost[0, src] // B)
+            res = _run(sched, r, wl, rotor)
+            assert int(res.t_deliver[0]) == predicted, (src, dst)
+            res2 = _run(sched, r, wl, chained)
+            assert 0 <= int(res2.t_deliver[0]) <= predicted, (src, dst)
+
+
+def test_packet_conservation():
+    sched = round_robin(N, 1)
+    wl = synthesize("kvstore", N, 60, slice_bytes=10_000, load=0.3,
+                    max_packets=800, seed=3)
+    res = _run(sched, vlb(sched), wl, slices=200)
+    P = wl.num_packets
+    delivered = (res.t_deliver >= 0).sum()
+    dropped = (res.loc_final == -3).sum()
+    waiting = ((res.loc_final >= 0)).sum()
+    not_injected = (res.loc_final == -1).sum()
+    assert delivered + dropped + waiting + not_injected == P
+    assert delivered > 0.9 * P
+
+
+def test_capacity_never_exceeded():
+    """Per-slice delivered bytes can't exceed aggregate fabric capacity."""
+    sched = round_robin(N, 1)
+    cfg = FabricConfig(slice_bytes=5_000)
+    wl = synthesize("rpc", N, 60, slice_bytes=5_000, load=0.5,
+                    max_packets=600, seed=4)
+    res = _run(sched, ucmp(sched), wl, cfg, slices=150)
+    cap = N * 5_000 + 5_000  # + elec headroom slack (elec disabled: 0)
+    assert (res.delivered_bytes <= cap).all()
+
+
+def test_congestion_detection_improves_delay_and_delivery():
+    """Paper Table 4 direction: enabling congestion detection must not hurt
+    delivery fraction or average queueing delay (the dramatic tail win comes
+    from push-back, exercised in the dedicated benchmark/test)."""
+    sched = round_robin(16, 1)
+    wl = synthesize("hadoop", 16, 60, slice_bytes=6_000, load=0.7,
+                    max_packets=2500, seed=5)
+    cfgs = [FabricConfig(slice_bytes=6_000, cc_detect=False, hops_per_slice=1),
+            FabricConfig(slice_bytes=6_000, cc_detect=True, hops_per_slice=1)]
+    res_no, res_cc = (_run(sched, hoho(sched), wl, c, slices=500) for c in cfgs)
+    frac_no = (res_no.t_deliver >= 0).mean()
+    frac_cc = (res_cc.t_deliver >= 0).mean()
+    d_no = (res_no.t_deliver - wl.t_inject)[res_no.t_deliver >= 0].mean()
+    d_cc = (res_cc.t_deliver - wl.t_inject)[res_cc.t_deliver >= 0].mean()
+    assert frac_cc >= frac_no
+    assert d_cc <= d_no * 1.02
+
+
+def test_pushback_blocks_injections():
+    sched = round_robin(N, 1)
+    wl = synthesize("hadoop", N, 40, slice_bytes=4_000, load=1.2,
+                    max_packets=1500, seed=6)
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    res = _run(sched, hoho(sched), wl, cfg, slices=200)
+    assert res.blocked_inj.sum() > 0  # push-back engaged
+    assert res.dropped[-1] == 0      # and no switch-buffer loss
+
+
+def test_buffer_offloading_moves_bytes_to_hosts():
+    sched = round_robin(8, 1)
+    wl = synthesize("hadoop", 8, 60, slice_bytes=8_000, load=0.7,
+                    max_packets=1500, seed=7)
+    base = FabricConfig(slice_bytes=8_000)
+    off = FabricConfig(slice_bytes=8_000, offload=True, offload_horizon=1)
+    r0 = _run(sched, vlb(sched), wl, base, slices=200)
+    r1 = _run(sched, vlb(sched), wl, off, slices=200)
+    assert r1.offl_bytes.sum() > 0
+    assert r1.buf_bytes.max() <= r0.buf_bytes.max()
+
+
+def test_switch_buffer_overflow_drops():
+    sched = round_robin(N, 1)
+    wl = synthesize("hadoop", N, 30, slice_bytes=2_000, load=2.0,
+                    max_packets=2000, seed=8)
+    cfg = FabricConfig(slice_bytes=2_000, cc_detect=False, switch_buffer=20_000)
+    res = _run(sched, vlb(sched), wl, cfg, slices=100)
+    assert res.dropped[-1] > 0
+
+
+def test_vlb_reorders_more_than_direct():
+    sched = round_robin(N, 1)
+    wl = synthesize("rpc", N, 80, slice_bytes=10_000, load=0.4,
+                    max_packets=1500, seed=9)
+    r_vlb = _run(sched, vlb(sched), wl, slices=220)
+    r_dir = _run(sched, direct(sched), wl, slices=220)
+    assert int(r_vlb.reorder_cnt) > int(r_dir.reorder_cnt)
+
+
+def test_electrical_clos_baseline_delivers():
+    net = OpenOpticsNet(dict(node="rack", node_num=N, uplink=1, slice_us=10,
+                             fabric=dict(slice_bytes=0, elec_bytes=20_000)))
+    sched = round_robin(N, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(clos_routing(N))
+    wl = synthesize("kvstore", N, 50, slice_bytes=20_000, load=0.3,
+                    max_packets=600, seed=10)
+    res = net.run(wl, 120)
+    assert (res.t_deliver >= 0).mean() > 0.95
+    assert int(res.reorder_cnt) == 0  # single path, no reordering
+
+
+def test_flow_pausing_elephants_wait_for_direct():
+    sched = round_robin(N, 1)
+    cfg = FabricConfig(slice_bytes=10_000, flow_pausing=True)
+    wl = _one_packet(0, 3)
+    wl.is_eleph[:] = True
+    res = _run(sched, vlb(sched), wl, cfg)
+    t = int(res.t_deliver[0])
+    assert sched.has_circuit(0, 3, t)  # went direct despite VLB tables
+    assert int(res.nhops[0]) == 1

@@ -1,0 +1,52 @@
+"""HLO analyzer correctness: trip-count-weighted FLOPs on a known program."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo import analyze_hlo, roofline_terms
+
+
+def test_scan_flops_weighted_by_trip_count():
+    """A scan of G matmuls must count G x the body's dot FLOPs (this is the
+    case XLA's own cost_analysis gets wrong — it visits the body once)."""
+    G, M, K, N = 8, 64, 128, 32
+    w = jnp.zeros((G, K, N), jnp.float32)
+
+    def step(x, wi):
+        y = x @ wi                      # [M,K] @ [K,N]
+        return x, y
+
+    def f(x, w):
+        _, ys = jax.lax.scan(step, x, w)
+        return ys.sum()
+
+    compiled = jax.jit(f).lower(jnp.zeros((M, K)), w).compile()
+    stats = analyze_hlo(compiled.as_text())
+    expect = 2.0 * G * M * K * N
+    assert abs(stats.flops - expect) / expect < 0.05, (stats.flops, expect)
+
+
+def test_plain_matmul_flops_exact():
+    M, K, N = 256, 512, 128
+    f = lambda a, b: a @ b
+    compiled = jax.jit(f).lower(jnp.zeros((M, K)), jnp.zeros((K, N))).compile()
+    stats = analyze_hlo(compiled.as_text())
+    assert abs(stats.flops - 2 * M * K * N) / (2 * M * K * N) < 0.01
+
+
+def test_bytes_nonzero_and_scale_with_size():
+    f = lambda a: (a * 2).sum()
+    c1 = jax.jit(f).lower(jnp.zeros((1 << 14,))).compile()
+    c2 = jax.jit(f).lower(jnp.zeros((1 << 18,))).compile()
+    s1 = analyze_hlo(c1.as_text())
+    s2 = analyze_hlo(c2.as_text())
+    assert s2.bytes > 4 * s1.bytes
+
+
+def test_roofline_terms_pick_dominant():
+    t = roofline_terms(197e12, 100e9, 0.0)   # 1s compute, ~0.12s memory
+    assert t["dominant"] == "compute_s"
+    t = roofline_terms(1e12, 819e9 * 2, 0.0)
+    assert t["dominant"] == "memory_s"
+    t = roofline_terms(1e10, 1e9, 50e9 * 3)
+    assert t["dominant"] == "collective_s"

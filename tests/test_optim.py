@@ -1,0 +1,95 @@
+"""Optimizer, schedules, accumulation, and gradient-compression tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, CompressionConfig, accum_add,
+                         accum_finalize, accum_init, adamw_init, adamw_update,
+                         clip_by_global_norm, compressed_bytes, cosine_schedule,
+                         ef_init, ef_roundtrip, global_norm)
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=100)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(loss(params)) < 0.1 * l0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 10.0}
+    clipped, n = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    assert float(n) == pytest.approx(20.0)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, 0)) == 0.0
+    assert float(cosine_schedule(cfg, 10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(cosine_schedule(cfg, 100)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_accumulation_equals_full_batch():
+    """Mean of microbatch grads == grad of the full-batch mean loss."""
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (8, 4))
+    y = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    params = {"w": jnp.zeros((4,))}
+    loss = lambda p, xx, yy: jnp.mean((xx @ p["w"] - yy) ** 2)
+    full = jax.grad(loss)(params, x, y)
+    acc = accum_init(params)
+    for i in range(4):
+        g = jax.grad(loss)(params, x[i * 2:(i + 1) * 2], y[i * 2:(i + 1) * 2])
+        acc = accum_add(acc, g)
+    acc = accum_finalize(acc, 4)
+    np.testing.assert_allclose(np.asarray(acc["w"]), np.asarray(full["w"]),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["int8", "topk"])
+def test_compression_error_feedback_converges(kind):
+    """With error feedback, the accumulated applied update converges to the
+    accumulated true gradient (EF-SGD property)."""
+    cfg = CompressionConfig(kind=kind, topk_frac=0.25)
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    err = jnp.zeros((64,))
+    applied = jnp.zeros((64,))
+    for _ in range(50):
+        out, err = ef_roundtrip(g_true, err, cfg)
+        applied = applied + out
+    mean_applied = applied / 50
+    rel = float(jnp.linalg.norm(mean_applied - g_true) / jnp.linalg.norm(g_true))
+    assert rel < 0.05, rel
+
+
+def test_int8_quantization_error_bounded():
+    cfg = CompressionConfig(kind="int8")
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(128,)) * 5, jnp.float32)
+    out, err = ef_roundtrip(x, jnp.zeros_like(x), cfg)
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    assert float(jnp.max(jnp.abs(out - x))) <= scale * 0.5 + 1e-6
+
+
+def test_compressed_bytes_accounting():
+    assert compressed_bytes(1000, CompressionConfig("none")) == 4000
+    assert compressed_bytes(1000, CompressionConfig("int8")) == 1004
+    assert compressed_bytes(1000, CompressionConfig("topk", topk_frac=0.01)) == 80
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_clip_idempotent_under_limit(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"x": jnp.asarray(rng.normal(size=(6,)) * 0.01, jnp.float32)}
+    clipped, _ = clip_by_global_norm(tree, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped["x"]), np.asarray(tree["x"]),
+                               rtol=1e-6)

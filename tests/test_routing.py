@@ -1,0 +1,147 @@
+"""Routing + time-flow table tests (paper §3, §4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Entry, TimeFlowTable, add_entry, direct, earliest_path,
+                        ecmp, hoho, ksp, neighbors, opera, round_robin, ucmp,
+                        uniform_mesh, vlb, wcmp)
+from repro.core.routing import _time_dp, _dp_B, INF
+
+
+def _coverage(r, n, T):
+    return (r.tf_next[..., 0] >= 0).sum() / (T * n * (n - 1))
+
+
+@pytest.mark.parametrize("alg", [direct, vlb, ucmp, hoho, opera])
+def test_to_routing_full_coverage(alg):
+    sched = round_robin(8, 1)
+    r = alg(sched)
+    assert _coverage(r, 8, sched.num_slices) == 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 12), src=st.integers(0, 11), dst=st.integers(0, 11),
+       ts=st.integers(0, 10))
+def test_earliest_path_rides_live_circuits(n, src, dst, ts):
+    src, dst, ts = src % n, dst % n, ts % (n - 1)
+    if src == dst:
+        return
+    sched = round_robin(n, 1)
+    path = earliest_path(sched, src, dst, ts)
+    assert path, f"no path {src}->{dst}@{ts}"
+    node, t = src, ts
+    for nxt, dep in path:
+        assert dep >= t  # departures move forward in time
+        assert sched.has_circuit(node, nxt, dep), (node, nxt, dep)
+        node, t = nxt, dep
+    assert node == dst
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 10), dst=st.integers(0, 9), ts=st.integers(0, 8))
+def test_hoho_table_achieves_dp_optimum(n, dst, ts):
+    """Every HOHO action leads a packet along a live circuit and the DP cost
+    of the chosen next hop is consistent with the optimum."""
+    dst, ts = dst % n, ts % (n - 1)
+    sched = round_robin(n, 1)
+    r = hoho(sched)
+    cost, H = _time_dp(sched, dst, 4)
+    B = _dp_B(sched, 4)
+    for node in range(n):
+        if node == dst:
+            continue
+        nxt = r.tf_next[ts, node, dst, 0]
+        off = r.tf_dep[ts, node, dst, 0]
+        assert nxt >= 0
+        assert sched.has_circuit(node, int(nxt), ts + int(off))
+
+
+def test_ucmp_slots_are_contiguous_and_valid():
+    sched = round_robin(10, 1)
+    r = ucmp(sched, kpaths=4)
+    valid = r.tf_next >= 0
+    # contiguity invariant: once a slot is invalid, all later slots are too
+    for s in range(1, 4):
+        assert not (valid[..., s] & ~valid[..., s - 1]).any()
+    # every valid slot rides a live circuit at its departure slice
+    T, N = sched.num_slices, 10
+    for t in range(T):
+        for n_ in range(N):
+            for d in range(N):
+                for s in range(4):
+                    m = r.tf_next[t, n_, d, s]
+                    if m >= 0:
+                        assert sched.has_circuit(n_, int(m), t + int(r.tf_dep[t, n_, d, s]))
+
+
+def test_vlb_injection_sprays_or_shortcuts():
+    sched = round_robin(8, 1)
+    r = vlb(sched)
+    for t in range(sched.num_slices):
+        for n_ in range(8):
+            peer = sched.conn[t, n_, 0]
+            for d in range(8):
+                if d == n_:
+                    continue
+                first = r.inj_next[t, n_, d, 0]
+                assert first >= 0
+                if d == peer:
+                    assert first == d  # direct shortcut
+                else:
+                    assert first == peer  # spray over current circuit
+
+
+def test_opera_paths_complete_within_slice():
+    sched = round_robin(9, 2)  # 2 uplinks -> richer in-slice graphs
+    r = opera(sched, max_hop=4)
+    # in-slice multi-hop entries have zero departure offset
+    inslice = (r.tf_next[..., 0] >= 0) & (r.tf_dep[..., 0] == 0)
+    assert inslice.mean() > 0.5
+
+
+def test_ecmp_is_flow_table_reduction():
+    """Paper §3: wildcarded time fields reduce to a classical flow table."""
+    mesh = uniform_mesh(8, 2)
+    r = ecmp(mesh)
+    assert r.num_slices == 1
+    assert r.is_flow_table()
+
+
+def test_wcmp_weights_follow_capacity():
+    mesh = uniform_mesh(6, 2)
+    r = wcmp(mesh)
+    assert r.weights is not None
+    assert (r.weights[r.tf_next >= 0] >= 1).all()
+
+
+def test_ksp_multiple_first_hops():
+    mesh = uniform_mesh(8, 3)
+    r = ksp(mesh, k=3)
+    multi = (r.tf_next[..., 1] >= 0).sum()
+    assert multi > 0
+
+
+def test_add_entry_wildcards():
+    sched = round_robin(4, 1)
+    r = direct(sched)
+    add_entry(r, node=0, dst=2, egress=3, arr_ts=None, dep_ts=None, slot=0)
+    assert (r.tf_next[:, 0, 2, 0] == 3).all()
+    assert (r.tf_dep[:, 0, 2, 0] == 0).all()
+
+
+def test_timeflow_table_entry_api():
+    t = TimeFlowTable(node=0, num_slices=4, num_nodes=4)
+    t.add(Entry(arr_ts=1, dst=2, egress=3, dep_ts=3))
+    t.add(Entry(arr_ts=None, dst=1, egress=1, dep_ts=None))  # flow entry
+    assert len(t.lookup(1, 2)) == 1
+    assert len(t.lookup(5, 2)) == 1  # 5 mod 4 == 1
+    assert not t.is_flow_table()
+    nxt, dep = t.compile(k=2)
+    assert nxt[1, 2, 0] == 3 and dep[1, 2, 0] == 2  # offset (3-1)
+    assert (nxt[:, 1, 0] == 1).all()
+    # source-routing entry: first hop lands in the table
+    t2 = TimeFlowTable(node=0, num_slices=4, num_nodes=4)
+    t2.add(Entry(arr_ts=0, dst=3, hops=((1, 0), (2, 1))))
+    nxt2, dep2 = t2.compile()
+    assert nxt2[0, 3, 0] == 1 and dep2[0, 3, 0] == 0

@@ -1,0 +1,121 @@
+"""End-to-end system behaviour: the paper's workflows (Fig. 4/5) on the
+simulator, the training/serving drivers, guardband and EQO claims."""
+import numpy as np
+import pytest
+
+from repro.core import (FabricConfig, OpenOpticsNet, derive_guardband, ecmp,
+                        flow_fcts, jupiter, round_robin, simulate_eqo,
+                        synthesize, uniform_mesh, vlb, wcmp)
+
+
+def test_rotornet_workflow_end_to_end():
+    """Fig. 5a: TO architecture — round-robin schedule + VLB routing."""
+    net = OpenOpticsNet(dict(node="rack", node_num=8, uplink=1, slice_us=10.0,
+                             fabric=dict(slice_bytes=10_000)))
+    sched = round_robin(8, 1, slice_us=10.0)
+    assert net.deploy_topo(sched)
+    assert net.deploy_routing(vlb(sched), LOOKUP="hop", MULTIPATH="packet")
+    wl = synthesize("kvstore", 8, 150, slice_bytes=10_000, load=0.3,
+                    max_packets=2000, seed=0)
+    res = net.run(wl, 450)
+    assert (res.t_deliver >= 0).mean() > 0.95
+    fct = flow_fcts(wl, res.t_deliver, net.slice_us)
+    assert len(fct) > 0 and np.median(fct) < 1000
+    # monitoring APIs
+    assert net.buffer_usage(0) >= 0
+    tm = net.collect()
+    assert tm.sum() > 0
+
+
+def test_jupiter_ta_workflow_loop():
+    """Fig. 5b: TA loop — collect TM, evolve topology, WCMP, redeploy."""
+    net = OpenOpticsNet(dict(node="rack", node_num=8, uplink=2, slice_us=100.0,
+                             fabric=dict(slice_bytes=50_000)))
+    windows = [synthesize("rpc", 8, 80, slice_bytes=50_000, load=0.3,
+                          max_packets=1200, seed=s) for s in (1, 2)]
+    state = {"prev": None}
+
+    def topo_fn(tm):
+        state["prev"] = jupiter(tm if tm.sum() else None, prev=state["prev"],
+                                n_nodes=8, n_uplinks=2, max_moves=4)
+        return state["prev"]
+
+    results = net.run_ta(windows, window_slices=200, topo_fn=topo_fn,
+                         routing_fn=lambda s: wcmp(s))
+    assert len(results) == 2
+    for res in results:
+        assert (res.t_deliver >= 0).mean() > 0.8
+
+
+def test_hybrid_semioblivious():
+    """Fig. 5c: sorn — skewed round-robin reflecting the TM."""
+    from repro.core import sorn
+    net = OpenOpticsNet(dict(node="rack", node_num=8, uplink=1, slice_us=10.0,
+                             fabric=dict(slice_bytes=10_000)))
+    base = round_robin(8, 1, slice_us=10.0)
+    wl = synthesize("kvstore", 8, 100, slice_bytes=10_000, load=0.3,
+                    max_packets=1500, seed=3, skew=0.7)
+    net.deploy_topo(base)
+    net.deploy_routing(vlb(base))
+    net.run(wl, 150)
+    skewed = sorn(net.collect(), base)
+    assert net.deploy_topo(skewed)
+    assert net.deploy_routing(vlb(skewed))
+    res = net.run(wl, 220)
+    assert (res.t_deliver >= 0).mean() > 0.9
+
+
+def test_guardband_reproduces_paper_2us():
+    """§7: rotation variance + EQO error + 2x sync -> 200 ns -> 2 us slice."""
+    g = derive_guardband()
+    assert g.rotation_variance_ns == pytest.approx(37.0)  # 1324 - 1287
+    assert g.eqo_error_ns == pytest.approx(58.0)
+    assert g.sync_guard_ns == pytest.approx(56.0)
+    assert g.guardband_ns == 200.0
+    assert g.min_slice_us == 2.0
+    assert g.duty_cycle == pytest.approx(0.9)
+
+
+def test_eqo_error_under_half_mtu_at_50ns():
+    """Fig. 12: 50 ns update interval keeps estimation error sub-MTU and the
+    error grows with the update interval."""
+    r50 = simulate_eqo(50, total_ns=100_000)
+    r800 = simulate_eqo(800, total_ns=100_000)
+    assert r50["err_max_bytes"] <= 750
+    assert r50["err_max_bytes"] < r800["err_max_bytes"]
+
+
+def test_train_driver_loss_decreases():
+    from repro.launch.train import train
+    out = train(arch="olmo-1b", preset="tiny", steps=40, global_batch=8,
+                seq=64, micro_batches=2, seed=0)
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_train_driver_gradient_compression_still_learns():
+    from repro.launch.train import train
+    out = train(arch="olmo-1b", preset="tiny", steps=30, global_batch=8,
+                seq=64, micro_batches=1, compression="int8", seed=0)
+    assert out["final_loss"] < out["first_loss"]
+
+
+def test_serve_driver_continuous_batching():
+    from repro.launch.serve import serve
+    out = serve(arch="olmo-1b", preset="tiny", requests=8, batch=4,
+                prompt_len=16, max_new=6, cache_len=64)
+    assert out["requests_done"] == 8
+    assert out["decode_tokens"] > 0
+
+
+def test_toolkit_packet_trace():
+    """§5.3 educational toolkit: the narrated trace reaches the destination
+    and every transmitted hop rides a live circuit."""
+    from repro.core import hoho, round_robin
+    from repro.core import toolkit
+    sched = round_robin(8, 1)
+    r = hoho(sched)
+    out = toolkit.trace_packet(sched, r, src=0, dst=5, t0=0)
+    assert "DELIVERED" in out
+    assert "DARK" not in out
+    view = toolkit.format_schedule(sched, max_slices=3)
+    assert "cycle 7 slices" in view

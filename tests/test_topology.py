@@ -1,0 +1,107 @@
+"""Topology API tests: schedule generators + feasibility (paper §4.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Circuit, Schedule, bvn, circuits_to_conn, connect,
+                        conn_to_circuits, deploy_topo_check, edmonds, jupiter,
+                        round_robin, sorn, uniform_mesh)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 24), u=st.integers(1, 3))
+def test_round_robin_every_slice_is_permutation(n, u):
+    s = round_robin(n, u)
+    assert s.num_slices == n - 1
+    for t in range(s.num_slices):
+        for k in range(u):
+            peers = s.conn[t, :, k]
+            # directed permutation without fixed points
+            assert sorted(peers.tolist()) == list(range(n))
+            assert (peers != np.arange(n)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 24), u=st.integers(1, 3))
+def test_round_robin_full_reachability_over_cycle(n, u):
+    """Every src/dst pair gets at least one direct circuit per cycle."""
+    s = round_robin(n, u)
+    seen = np.zeros((n, n), bool)
+    for t in range(s.num_slices):
+        for k in range(u):
+            seen[np.arange(n), s.conn[t, :, k]] = True
+    np.fill_diagonal(seen, True)
+    assert seen.all()
+
+
+def test_round_robin_multidim_shale():
+    s = round_robin(16, n_uplinks=2, dimension=2)
+    assert deploy_topo_check(s.conn)
+    # each uplink only connects within its grid dimension
+    assert s.num_nodes == 16
+
+
+def test_connect_rejects_port_conflicts():
+    circuits: list[Circuit] = []
+    assert connect(circuits, 0, 0, 1, 0, ts=0)
+    assert not connect(circuits, 0, 0, 2, 0, ts=0)  # same src port, same slice
+    assert connect(circuits, 0, 0, 2, 0, ts=1)
+
+
+def test_circuits_roundtrip():
+    s = round_robin(6, 2)
+    back = circuits_to_conn(conn_to_circuits(s.conn), 6, 2, s.num_slices)
+    assert (back == s.conn).all()
+
+
+def test_deploy_topo_check_rejects_self_circuit():
+    conn = np.full((1, 4, 1), -1, dtype=np.int32)
+    conn[0, 2, 0] = 2
+    assert not deploy_topo_check(conn)
+
+
+def test_edmonds_is_matching():
+    rng = np.random.default_rng(0)
+    tm = rng.random((8, 8)) * 100
+    s = edmonds(tm)
+    peers = s.conn[0, :, 0]
+    for i in range(8):
+        j = peers[i]
+        if j >= 0:
+            assert peers[j] == i  # symmetric matching
+
+
+def test_bvn_slices_are_permutations_weighted_by_tm():
+    rng = np.random.default_rng(1)
+    tm = rng.random((6, 6)) * 50
+    np.fill_diagonal(tm, 0)
+    s = bvn(tm, max_perms=16)
+    assert s.num_slices >= 1
+    for t in range(s.num_slices):
+        peers = s.conn[t, :, 0]
+        assert sorted(peers.tolist()) == list(range(6))
+
+
+def test_jupiter_moves_bounded():
+    base = uniform_mesh(8, 1)
+    tm = np.zeros((8, 8))
+    tm[0, 5] = tm[5, 0] = 100
+    s = jupiter(tm, prev=base, max_moves=2)
+    moved = (s.conn != base.conn).sum()
+    assert moved <= 2
+    assert s.num_slices == 1
+
+
+def test_sorn_adds_hot_slices():
+    base = round_robin(8, 1)
+    tm = np.zeros((8, 8))
+    tm[1, 4] = 1000
+    s = sorn(tm, base)
+    assert s.num_slices > base.num_slices
+    extra = s.conn[base.num_slices:]
+    assert (extra[:, 1, 0] == 4).any() or (extra[:, 4, 0] == 1).any()
+
+
+def test_duty_cycle():
+    s = round_robin(4, 1, slice_us=90.0, reconf_us=10.0)
+    assert s.duty_cycle == pytest.approx(0.9)
