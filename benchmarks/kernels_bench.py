@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.core import FabricConfig, FabricTables, round_robin, synthesize, ucmp
+from repro.core import (FabricConfig, FabricTables, direct, round_robin,
+                        synthesize, ucmp)
 from repro.core.fabric import simulate
 from .common import timed
 
@@ -58,6 +59,23 @@ def run(quick: bool = False):
         rows.append(("kern_attn_pallas_interp_512", us_p,
                      "interpret-mode (dispatch cost only)"))
 
+    # routing-compiler throughput at paper scale (108 ToRs, T = 107):
+    # the time-expanded DP + equal-cost slot collection is the control-plane
+    # hot path the fabric depends on before a single packet moves.
+    n_route = 32 if quick else 108
+    sched_r = round_robin(n_route, 1)
+    t0 = time.time()
+    r = ucmp(sched_r)
+    dt = time.time() - t0
+    ent = r.tf_next.size
+    rows.append((f"route_ucmp_compile_{n_route}", dt * 1e6,
+                 f"{ent/dt/1e6:.1f}Mentry/s"))
+    t0 = time.time()
+    rd = direct(sched_r)
+    dt = time.time() - t0
+    rows.append((f"route_direct_compile_{n_route}", dt * 1e6,
+                 f"{rd.tf_next.size/dt/1e6:.1f}Mentry/s"))
+
     # fabric simulator throughput
     n2 = 16
     sched = round_robin(n2, 1)
@@ -72,4 +90,16 @@ def run(quick: bool = False):
     dt = time.time() - t0
     rate = wl.num_packets * S / dt
     rows.append(("fabric_sim_rate", dt * 1e6, f"{rate/1e6:.2f}Mpkt-slice/s"))
+
+    # fabric simulator at P = 2^15 (the ISSUE-1 acceptance shape)
+    if not quick:
+        wl2 = synthesize("rpc", n2, 60, slice_bytes=10_000, load=4.0,
+                         max_packets=1 << 15, seed=1)
+        simulate(tables, wl2, cfg, S)  # warm compile
+        t0 = time.time()
+        simulate(tables, wl2, cfg, S)
+        dt = time.time() - t0
+        rate = wl2.num_packets * S / dt
+        rows.append(("fabric_sim_rate_32k", dt * 1e6,
+                     f"{rate/1e6:.2f}Mpkt-slice/s"))
     return rows

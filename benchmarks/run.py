@@ -1,10 +1,17 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §6).
-Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs reduced settings."""
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs reduced settings.
+``--json`` additionally writes ``BENCH_<module>.json`` (name -> us/derived)
+to the repo root so the perf trajectory is tracked across PRs (quick runs
+write ``BENCH_<module>.quick.json`` to keep the baseline comparable)."""
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 MODULES = [
     "fig8_fct",
@@ -26,6 +33,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module subset")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<module>.json to the repo root")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")
@@ -33,9 +42,19 @@ def main() -> None:
     for name in mods:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = []
             for row in mod.run(quick=args.quick):
                 n, us, derived = row
+                rows.append((n, us, derived))
                 print(f"{n},{us:.1f},{derived}", flush=True)
+            if args.json:
+                payload = {n: {"us_per_call": round(us, 1), "derived": str(d)}
+                           for n, us, d in rows}
+                # quick runs use reduced settings — keep them out of the
+                # tracked full-run baseline
+                suffix = ".quick.json" if args.quick else ".json"
+                out = REPO_ROOT / f"BENCH_{name}{suffix}"
+                out.write_text(json.dumps(payload, indent=2) + "\n")
         except Exception:
             traceback.print_exc()
             failed.append(name)

@@ -7,7 +7,7 @@ push-back pauses hosts, and buffers can be offloaded to hosts. Here the whole
 data plane is a single ``lax.scan`` over time slices with packets as
 structure-of-arrays tensors — fully ``jit``-able, so the simulator itself is a
 JAX workload (and the per-packet table lookup has a Pallas TPU kernel,
-``repro.kernels.time_flow_lookup``).
+``repro.kernels.time_flow_lookup``, selected with ``FabricConfig.lookup_impl``).
 
 Semantics per slice ``t`` (mirroring §5.1):
   1. hosts inject packets whose time has come (unless push-back blocks them;
@@ -26,6 +26,38 @@ Semantics per slice ``t`` (mirroring §5.1):
 An "electrical" egress (peer id == N) models the packet-switched fabric of
 hybrid architectures (c-Through) and the Clos baseline: always available,
 per-node capacity ``elec_bytes``, one-slice transit delay.
+
+Hot-path architecture (ISSUE 1; bit-identical to the reference formulation
+kept in ``tests/fabric_ref.py``):
+
+* **Calendar-queue occupancy is carried in the scan state** as a flat
+  ``[N * 2T]`` byte map instead of being rebuilt with a ``segment_sum`` at
+  every congestion check. Packets enter their (node, dep mod 2T) bucket when
+  they enqueue with a future departure, move buckets when deferred, and leave
+  the map in the slice their queue activates. Per-node buffer totals and the
+  per-slice ``buf/offl`` statistics are row/column sums of this map.
+* **Each phase runs on a compact view of the packet vector.** The active
+  population (injection + re-lookup candidates; per-hop transmission
+  candidates) is compacted in index order with cumsum + searchsorted (no
+  scatter), the whole phase — admission sort, table lookup, occupancy and
+  reorder updates — executes at the view width (tiers of 2048 / 8192), and
+  the touched fields are scattered back. ``lax.cond`` picks the tier from
+  the live count and falls back to the full-width formulation above the
+  largest tier; empty phases reduce to the identity. FIFO admission is
+  order-preserving under compaction, so results are unchanged.
+* **Provably-rejected backlog is dropped from later hops.** Admission is a
+  cumulative-prefix cut per (loc, nxt) group and per-group capacity only
+  shrinks within a slice, so a packet positioned at or after the first
+  rejected index of its group can never be admitted in a later hop. Hop 0
+  records the minimum rejected index per group; hops >= 1 only re-sort the
+  cut-through continuations (push-back re-scans everything: rx filtering
+  breaks the monotonicity argument). This is what makes the packet vector
+  effectively *sorted once per slice*.
+* **The injection and deferred-re-lookup table lookups are fused** into one
+  gather over stacked (injection, transit) tables; the transit lookup inside
+  the hop body is the third and only other lookup site.
+* **Per-slice circuit capacities are precompiled** for the whole schedule
+  cycle (``[T, N*(N+1)]``) outside the scan.
 """
 from __future__ import annotations
 
@@ -36,8 +68,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .routing import CompiledRouting
+from .routing import CompiledRouting, first_direct_offsets
 from .topology import Schedule
+from ..kernels.time_flow_lookup import time_flow_lookup
 
 __all__ = ["FabricConfig", "Workload", "FabricTables", "simulate", "SimResult"]
 
@@ -61,6 +94,7 @@ class FabricConfig:
     offload_horizon: int = 2         # switch keeps N calendar queues; rest on hosts
     flow_pausing: bool = False       # hold elephants for direct circuits (§5.2)
     congestion_threshold: int = 1 << 30  # classic CC threshold, bytes per queue
+    lookup_impl: str = "jnp"         # "jnp" | "pallas" (TPU) | "pallas-interpret"
 
 
 @dataclasses.dataclass
@@ -110,20 +144,7 @@ class FabricTables:
 def _first_direct(sched: Schedule) -> np.ndarray:
     """first_direct[t, n, d]: slices to wait at node n (arriving slice t) for a
     direct circuit n -> d; -1 if the schedule never provides one."""
-    T, N, U = sched.conn.shape
-    has = np.zeros((T, N, N), dtype=bool)
-    for t in range(T):
-        for k in range(U):
-            peer = sched.conn[t, :, k]
-            ok = peer >= 0
-            has[t, np.arange(N)[ok], peer[ok]] = True
-    fd = np.full((T, N, N), -1, dtype=np.int32)
-    for t in range(T):
-        for off in range(T):
-            tt = (t + off) % T
-            newly = has[tt] & (fd[t] < 0)
-            fd[t] = np.where(newly, off, fd[t])
-    return fd
+    return first_direct_offsets(sched)
 
 
 @dataclasses.dataclass
@@ -151,18 +172,31 @@ def _hash32(x: jnp.ndarray) -> jnp.ndarray:
     return x ^ (x >> 16)
 
 
-def _lookup(next_tbl, dep_tbl, t, node, dst, hashv):
-    """Time-flow table lookup: match (arrival slice, dst) at ``node``; choose
-    a multipath slot by hash over the (contiguous) valid slots."""
-    Tr, _, _, K = next_tbl.shape
-    tm = t % Tr
-    row_n = next_tbl[tm, node, dst]          # [P, K]
-    row_d = dep_tbl[tm, node, dst]
+def _select_slot(row_n, row_d, hashv):
+    """Choose a multipath slot by hash over the (contiguous) valid slots."""
     nvalid = jnp.sum(row_n >= 0, axis=-1)    # [P]
     slot = (hashv % jnp.maximum(nvalid, 1).astype(jnp.uint32)).astype(jnp.int32)
     nxt = jnp.take_along_axis(row_n, slot[:, None], axis=-1)[:, 0]
     off = jnp.take_along_axis(row_d, slot[:, None], axis=-1)[:, 0]
     return nxt, off
+
+
+def _lookup(next_tbl, dep_tbl, t, node, dst, hashv, impl: str = "jnp"):
+    """Time-flow table lookup: match (arrival slice, dst) at ``node``.
+
+    ``impl="jnp"`` is the pure-gather formulation; ``"pallas"`` routes through
+    the :mod:`repro.kernels.time_flow_lookup` TPU kernel (compiled lowering),
+    ``"pallas-interpret"`` runs the same kernel body in interpret mode (CPU
+    validation). All three produce bit-identical outputs.
+    """
+    Tr = next_tbl.shape[0]
+    tm = t % Tr
+    if impl != "jnp":
+        return time_flow_lookup(next_tbl[tm], dep_tbl[tm], node, dst, hashv,
+                                interpret=(impl != "pallas"))
+    row_n = next_tbl[tm, node, dst]          # [P, K]
+    row_d = dep_tbl[tm, node, dst]
+    return _select_slot(row_n, row_d, hashv)
 
 
 def _group_admit(key, size, want, cap_left, num_keys):
@@ -190,18 +224,82 @@ def _group_admit(key, size, want, cap_left, num_keys):
     return admitted, used
 
 
-def _build_caps(conn_t, cfg: FabricConfig, N: int):
-    """Per-circuit capacity for this slice, keyed loc*(N+1)+peer; key
-    loc*(N+1)+N is the electrical egress."""
-    caps = jnp.zeros((N * (N + 1),), jnp.int32)
-    U = conn_t.shape[1]
-    rows = jnp.arange(N, dtype=jnp.int32)
+# Compact-path population bounds: when at most this many packets are active in
+# a phase, the phase runs on a gathered C-sized view of the packet vector
+# (sorting/scattering C elements) instead of all P. ``lax.cond`` falls back to
+# the full-width formulation above the bound, so results are identical.
+ADMIT_C = 8192
+SMALL_C = 4096
+
+
+def _compact_idx(mask, C):
+    """Indices of the first C True entries of ``mask`` in index order
+    (== len(mask) for fill slots), via cumsum + searchsorted — no scatter."""
+    cm = jnp.cumsum(mask.astype(jnp.int32))
+    return jnp.searchsorted(cm, jnp.arange(1, C + 1, dtype=jnp.int32))
+
+
+def _group_admit_small(key, size, want, cap_left, num_keys, C):
+    """FIFO admission on the compacted want-set: identical results to
+    :func:`_group_admit` whenever ``sum(want) <= C`` (compaction preserves
+    index order, so per-group FIFO prefixes are unchanged)."""
+    P = key.shape[0]
+    idx = _compact_idx(want, C)
+    ok = idx < P
+    ic = jnp.clip(idx, 0, P - 1)
+    kc = jnp.where(ok, key[ic], num_keys)
+    sc = jnp.where(ok, size[ic], 0)
+    adm_c, used = _group_admit(kc, sc, ok, cap_left, num_keys)
+    admitted = jnp.zeros((P,), bool).at[idx].set(adm_c, mode="drop")
+    return admitted, used
+
+
+def _admit(key, size, want, cap_left, num_keys, C=ADMIT_C):
+    """Dispatch between the compact and full admission paths."""
+    P = key.shape[0]
+    if P <= C:
+        return _group_admit(key, size, want, cap_left, num_keys)
+    return jax.lax.cond(
+        jnp.sum(want) <= C,
+        lambda _: _group_admit_small(key, size, want, cap_left, num_keys, C),
+        lambda _: _group_admit(key, size, want, cap_left, num_keys),
+        None)
+
+
+def _scatter_add_masked(target, indices, values, mask, C=SMALL_C):
+    """``target.at[indices].add(where(mask, values, 0))`` with a compact fast
+    path for sparse masks (same sum, so bit-identical)."""
+    P = indices.shape[0]
+    if P <= C:
+        return target.at[indices].add(jnp.where(mask, values, 0))
+
+    def small(tgt):
+        idx = _compact_idx(mask, C)
+        ok = idx < P
+        ic = jnp.clip(idx, 0, P - 1)
+        return tgt.at[jnp.where(ok, indices[ic], 0)].add(
+            jnp.where(ok, values[ic], 0))
+
+    def big(tgt):
+        return tgt.at[indices].add(jnp.where(mask, values, 0))
+
+    return jax.lax.cond(jnp.sum(mask) <= C, small, big, target)
+
+
+def _build_caps_all(conn, cfg: FabricConfig, N: int):
+    """Per-circuit capacity for every slice of the cycle, keyed
+    loc*(N+1)+peer; key loc*(N+1)+N is the electrical egress. Precomputed
+    once per ``simulate`` call ([T, N*(N+1)]) instead of per slice."""
+    T, _, U = conn.shape
+    caps = jnp.zeros((T, N * (N + 1)), jnp.int32)
+    rows = jnp.arange(N, dtype=jnp.int32)[None, :]
+    trows = jnp.arange(T)[:, None]
     for k in range(U):
-        peer = conn_t[:, k]
+        peer = conn[:, :, k]                                   # [T, N]
         keyk = rows * (N + 1) + jnp.where(peer >= 0, peer, N)  # dark -> elec key
         add = jnp.where(peer >= 0, jnp.int32(cfg.slice_bytes), 0)
-        caps = caps.at[keyk].add(add)
-    caps = caps.at[rows * (N + 1) + N].add(jnp.int32(cfg.elec_bytes))
+        caps = caps.at[trows, keyk].add(add)
+    caps = caps.at[:, jnp.arange(N) * (N + 1) + N].add(jnp.int32(cfg.elec_bytes))
     return caps
 
 
@@ -209,6 +307,9 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
              num_slices: int) -> SimResult:
     """Run the fabric for ``num_slices`` slices. Everything inside is jitted;
     re-compilation happens per (packet count, table shapes, config)."""
+    if cfg.lookup_impl not in ("jnp", "pallas", "pallas-interpret"):
+        raise ValueError(f"unknown lookup_impl {cfg.lookup_impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas-interpret'")
     T, N, U = tables.conn.shape
     dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
     j = dict(
@@ -232,6 +333,23 @@ def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
     P = j["src"].shape[0]
     pid = jnp.arange(P, dtype=jnp.int32)
     NKEY = N * (N + 1)
+    T2 = 2 * T                       # calendar-queue ring: dep in (t, t + 2T)
+    NQ = N * T2
+    limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
+    Tr = j["tf_next"].shape[0]
+    # population tiers for the per-phase compact views (see module docstring)
+    TIERS = [c for c in (2048, ADMIT_C) if c < P]
+
+    caps_all = _build_caps_all(j["conn"], cfg, N)          # [T, NKEY]
+
+    # Stacked (injection, transit) tables for the fused first-phase lookup.
+    # K is padded to the common max with invalid slots: the valid-slot count
+    # (and therefore the hash slot choice) is unchanged.
+    K = max(j["inj_next"].shape[-1], j["tf_next"].shape[-1])
+    padk = lambda a, fill: jnp.pad(a, [(0, 0)] * 3 + [(0, K - a.shape[-1])],
+                                   constant_values=fill)
+    stk_n = jnp.stack([padk(j["inj_next"], -1), padk(j["tf_next"], -1)])
+    stk_d = jnp.stack([padk(j["inj_dep"], 0), padk(j["tf_dep"], 0)])
 
     state = dict(
         loc=jnp.full((P,), NOT_INJECTED, jnp.int32),
@@ -243,153 +361,328 @@ def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
         block_until=jnp.zeros((N, T), jnp.int32),  # [dst, slice bucket]
         max_seq=jnp.full((num_flows,), -1, jnp.int32),
         reorder=jnp.zeros((), jnp.int32),
+        occ=jnp.zeros((NQ,), jnp.int32),  # calendar-queue occupancy [N * 2T]
     )
+
+    # per-packet constants bundled into the phase views
+    CONSTS = dict(size=j["size"], dst=j["dst"], src=j["src"], flow=j["flow"],
+                  seq=j["seq"], is_eleph=j["is_eleph"])
+    HOP_FIELDS = ("loc", "nxt", "dep", "relook", "nhops", "t_del")
+    INJ_FIELDS = ("loc", "nxt", "dep", "relook")
 
     def mp_hash(t):
         base = pid if per_packet_mp else j["flow"]
         salt = jnp.uint32(t) * jnp.uint32(0x9E3779B9) if per_packet_mp else jnp.uint32(0)
         return _hash32(base.astype(jnp.uint32) + salt)
 
-    def enqueue_checks(s, t, arrived, off):
-        """Congestion detection at enqueue (paper §5.2): a calendar queue is
-        full if occupancy would exceed the admissible amount for its slice.
-        Deferral (+ optional push-back) happens here."""
-        dep_abs = t + off
-        # occupancy of the target queue bucket (node, dep mod 2T) right now
-        qb = (s["loc"] * (2 * T) + dep_abs % (2 * T))
-        waiting = (s["loc"] >= 0) & (s["dep"] > t)
-        occ = jax.ops.segment_sum(jnp.where(waiting, j["size"], 0),
-                                  jnp.where(waiting, s["loc"] * (2 * T) + s["dep"] % (2 * T), N * 2 * T),
-                                  num_segments=N * 2 * T + 1)[:N * 2 * T]
-        q_occ = occ[jnp.clip(qb, 0, N * 2 * T - 1)]
-        limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
-        # occupancy already includes the packet itself (it is waiting)
-        full = arrived & (off > 0) & (q_occ > limit)
-        if cfg.cc_detect:
-            # defer: retry (re-lookup) next slice
-            defer = full
-            s["relook"] = s["relook"] | defer
-            s["dep"] = jnp.where(defer, t + 1, s["dep"])
-            if cfg.pushback:
-                blk_t = dep_abs % T
-                upd = jnp.where(defer, t + T, 0)
-                s["block_until"] = s["block_until"].at[j["dst"], blk_t].max(upd)
-        return s, full
-
     def step(state, t):
         s = dict(state)
         h = mp_hash(t)
+        caps = caps_all[t % T]
 
-        # -- 1. injection -------------------------------------------------
+        def vbucket(v, dep_abs):
+            return jnp.clip(v["loc"], 0, N - 1) * T2 + dep_abs % T2
+
+        def make_view(s, fields, mask, extras, C):
+            """A view of the packet vector: full-width (C None) or the first
+            C entries of ``mask`` compacted in index order."""
+            if C is None:
+                v = {k: s[k] for k in fields}
+                v.update(CONSTS)
+                v["h"] = h
+                v.update(extras)
+                return v, None
+            idx = _compact_idx(mask, C)
+            okc = idx < P
+            ic = jnp.clip(idx, 0, P - 1)
+            v = {k: s[k][ic] for k in fields}
+            v.update({k: a[ic] for k, a in CONSTS.items()})
+            v["h"] = h[ic]
+            v.update({k: a[ic] & okc for k, a in extras.items()})
+            v["_ok"] = okc
+            return v, idx
+
+        def write_view(s, v, fields, idx):
+            s = dict(s)
+            for k in fields:
+                s[k] = v[k] if idx is None else s[k].at[idx].set(v[k], mode="drop")
+            return s
+
+        def enqueue_checks(s, v, arrived, off):
+            """Congestion detection at enqueue (paper §5.2) against the
+            carried occupancy map (which already includes the arrived
+            packets): a calendar queue is full if occupancy exceeds the
+            admissible amount for its slice. Deferral (+ optional push-back)
+            moves the packet's bytes to the next-slice bucket."""
+            dep_abs = t + off
+            qb = vbucket(v, dep_abs)
+            q_occ = s["occ"][qb]
+            full = arrived & (off > 0) & (q_occ > limit)
+            if not cfg.cc_detect:
+                return s, v
+
+            def _defer(op):
+                s, v = dict(op[0]), dict(op[1])
+                s["occ"] = _scatter_add_masked(s["occ"], qb, -v["size"], full)
+                s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + 1),
+                                               v["size"], full)
+                v["relook"] = v["relook"] | full
+                v["dep"] = jnp.where(full, t + 1, v["dep"])
+                if cfg.pushback:
+                    upd = jnp.where(full, t + T, 0)
+                    s["block_until"] = s["block_until"].at[
+                        jnp.where(full, v["dst"], 0), dep_abs % T].max(upd)
+                return s, v
+
+            return jax.lax.cond(jnp.any(full), _defer,
+                                lambda op: (dict(op[0]), dict(op[1])), (s, v))
+
+        # -- 0. calendar queues activating this slice leave the occupancy map
+        act = (s["loc"] >= 0) & (s["dep"] == t)
+        s["occ"] = jax.lax.cond(
+            jnp.any(act),
+            lambda occ: _scatter_add_masked(
+                occ, jnp.clip(s["loc"], 0, N - 1) * T2 + t % T2, -j["size"], act),
+            lambda occ: occ, s["occ"])
+
+        # -- 1+2. injection & re-lookup of deferred packets (fused lookup) ---
         ready = (j["t_inject"] <= t) & (s["loc"] == NOT_INJECTED)
-        nxt_i, off_i = _lookup(j["inj_next"], j["inj_dep"], t, j["src"], j["dst"], h)
-        if cfg.flow_pausing:
-            fd = j["first_direct"][t % T, j["src"], j["dst"]]
-            use_direct = j["is_eleph"] & (fd >= 0)
-            nxt_i = jnp.where(use_direct, j["dst"], nxt_i)
-            off_i = jnp.where(use_direct, fd, off_i)
-        if cfg.pushback:
-            # hosts hold traffic whose *target* slice bucket was pushed back
-            blocked = s["block_until"][j["dst"], (t + off_i) % T] > t
-        else:
-            blocked = jnp.zeros((ready.shape[0],), bool)
-        inject = ready & ~blocked
-        s["loc"] = jnp.where(inject, j["src"], s["loc"])
-        s["nxt"] = jnp.where(inject, nxt_i, s["nxt"])
-        s["dep"] = jnp.where(inject, t + off_i, s["dep"])
-        s, _ = enqueue_checks(s, t, inject, jnp.where(inject, off_i, 0))
-        n_blocked = jnp.sum(ready & blocked)
-
-        # -- 2. re-lookup deferred packets ---------------------------------
         redo = s["relook"] & (s["loc"] >= 0) & (s["dep"] == t)
-        nxt_r, off_r = _lookup(j["tf_next"], j["tf_dep"], t, jnp.clip(s["loc"], 0, N - 1),
-                               j["dst"], h)
-        s["nxt"] = jnp.where(redo, nxt_r, s["nxt"])
-        s["dep"] = jnp.where(redo, t + off_r, s["dep"])
-        s["relook"] = s["relook"] & ~redo
+
+        def inj_redo_logic(s, v):
+            if cfg.lookup_impl == "jnp":
+                # one gather serves both phases: injection reads the inj
+                # table at src, deferred packets read the transit table at loc
+                sel = jnp.where(v["ready"], 0, 1)
+                node = jnp.where(v["ready"], v["src"], jnp.clip(v["loc"], 0, N - 1))
+                row_n = stk_n[sel, t % Tr, node, v["dst"]]
+                row_d = stk_d[sel, t % Tr, node, v["dst"]]
+                nxt_i, off_i = _select_slot(row_n, row_d, v["h"])
+                nxt_r, off_r = nxt_i, off_i
+            else:
+                nxt_i, off_i = _lookup(j["inj_next"], j["inj_dep"], t,
+                                       v["src"], v["dst"], v["h"], cfg.lookup_impl)
+                nxt_r, off_r = _lookup(j["tf_next"], j["tf_dep"], t,
+                                       jnp.clip(v["loc"], 0, N - 1), v["dst"],
+                                       v["h"], cfg.lookup_impl)
+            if cfg.flow_pausing:
+                fd = j["first_direct"][t % T, v["src"], v["dst"]]
+                use_direct = v["is_eleph"] & (fd >= 0)
+                nxt_i = jnp.where(use_direct, v["dst"], nxt_i)
+                off_i = jnp.where(use_direct, fd, off_i)
+            if cfg.pushback:
+                # hosts hold traffic whose *target* slice bucket was pushed back
+                blocked = s["block_until"][v["dst"], (t + off_i) % T] > t
+            else:
+                blocked = jnp.zeros(v["ready"].shape, bool)
+            inject = v["ready"] & ~blocked
+            v["loc"] = jnp.where(inject, v["src"], v["loc"])
+            v["nxt"] = jnp.where(inject, nxt_i, v["nxt"])
+            v["dep"] = jnp.where(inject, t + off_i, v["dep"])
+            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_i),
+                                           v["size"], inject & (off_i > 0))
+            s, v = enqueue_checks(s, v, inject, jnp.where(inject, off_i, 0))
+            n_blocked = jnp.sum(v["ready"] & blocked)
+            # deferred packets re-enter the pipeline with a fresh action
+            v["nxt"] = jnp.where(v["redo"], nxt_r, v["nxt"])
+            v["dep"] = jnp.where(v["redo"], t + off_r, v["dep"])
+            v["relook"] = v["relook"] & ~v["redo"]
+            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_r),
+                                           v["size"], v["redo"] & (off_r > 0))
+            return s, v, n_blocked
+
+        inj_mask = ready | redo
+        inj_cnt = jnp.sum(inj_mask)
+
+        def inj_full(s):
+            v, idx = make_view(s, INJ_FIELDS, None, dict(ready=ready, redo=redo), None)
+            s, v, n_blocked = inj_redo_logic(dict(s), v)
+            return write_view(s, v, INJ_FIELDS, idx), n_blocked
+
+        def inj_compact(C):
+            def fn(s, C=C):
+                v, idx = make_view(s, INJ_FIELDS, inj_mask,
+                                   dict(ready=ready, redo=redo), C)
+                s, v, n_blocked = inj_redo_logic(dict(s), v)
+                return write_view(s, v, INJ_FIELDS, idx), n_blocked
+            return fn
+
+        inj_fn = inj_full
+        for c in TIERS[::-1]:
+            inj_fn = (lambda s, cc=c, inner=inj_fn:
+                      jax.lax.cond(inj_cnt <= cc, inj_compact(cc), inner, s))
+        s, n_blocked = jax.lax.cond(
+            inj_cnt > 0, inj_fn,
+            lambda s: (dict(s), jnp.zeros((), jnp.int32)), s)
+
+        def on_switch_bytes(occ):
+            """Per-node switch-resident bytes: occupancy columns within the
+            offload horizon (all columns without offloading)."""
+            occ2 = occ.reshape(N, T2)
+            if not cfg.offload:
+                return occ2.sum(axis=1)
+            hor = max(0, min(cfg.offload_horizon, T2 - 1))
+            cols = (t + 1 + jnp.arange(hor)) % T2
+            return occ2[:, cols].sum(axis=1)
 
         # -- 3. transmission with cut-through chaining ---------------------
-        caps = _build_caps(j["conn"][t % T], cfg, N)
         used = jnp.zeros((NKEY,), jnp.int32)
-        # switch buffer occupancy at slice start, for drop decisions
-        on_switch = (s["loc"] >= 0) & (s["dep"] > t) & \
-                    ((s["dep"] - t <= cfg.offload_horizon) if cfg.offload else True)
-        buf_now = jax.ops.segment_sum(jnp.where(on_switch, j["size"], 0),
-                                      jnp.clip(s["loc"], 0, N - 1) * jnp.where(s["loc"] >= 0, 1, 0),
-                                      num_segments=N)
+        buf_now = on_switch_bytes(s["occ"])
 
-        for _hop in range(cfg.hops_per_slice):
-            want = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
-                   (s["nhops"] < cfg.max_hops)
+        def hop_logic(s, v, used, buf_now, backlog_min):
+            want = v["active"]
             if cfg.pushback:
                 # push-back rejects at the *sender*: no transmission into a
                 # full downstream switch (paper §5.2); rejected packets miss
                 # the slice and defer instead of being dropped on arrival.
                 # FIFO admission against the receiver's remaining buffer room.
-                need_buf = want & (s["nxt"] < N) & (s["nxt"] != j["dst"])
+                need_buf = want & (v["nxt"] < N) & (v["nxt"] != v["dst"])
                 room = jnp.maximum(cfg.switch_buffer - buf_now, 0)
-                adm_rx, _ = _group_admit(jnp.clip(s["nxt"], 0, N - 1),
-                                         j["size"], need_buf, room, N)
+                adm_rx, _ = _admit(jnp.clip(v["nxt"], 0, N - 1), v["size"],
+                                   need_buf, room, N)
                 want &= adm_rx | ~need_buf
-            key = jnp.clip(s["loc"], 0, N - 1) * (N + 1) + jnp.clip(s["nxt"], 0, N)
-            admitted, consumed = _group_admit(key, j["size"], want, caps - used, NKEY)
+            key = jnp.clip(v["loc"], 0, N - 1) * (N + 1) + jnp.clip(v["nxt"], 0, N)
+            admitted, consumed = _admit(key, v["size"], want, caps - used, NKEY)
             used = used + consumed
-            is_elec = admitted & (s["nxt"] == N)
+            # Rejected packets form the slice's backlog: admission is a
+            # cumulative-prefix cut per group and capacities only shrink, so a
+            # packet positioned after a rejected one in its group can never be
+            # admitted later this slice. Remember the minimum rejected index
+            # per group; later hops drop those provably-rejected candidates.
+            # (Push-back breaks the monotonicity argument — rx-filtering can
+            # remove predecessor bytes from the capacity prefix — so the
+            # filter is only applied without it.)
+            if not cfg.pushback:
+                rejected = v["active"] & ~admitted
+                backlog_min = backlog_min.at[jnp.where(rejected, key, 0)].min(
+                    jnp.where(rejected, v["gidx"], P))
+            is_elec = admitted & (v["nxt"] == N)
             moved = admitted & ~is_elec
-            newloc = jnp.where(moved, s["nxt"], s["loc"])
-            at_dst = (moved & (s["nxt"] == j["dst"])) | is_elec
+            newloc = jnp.where(moved, v["nxt"], v["loc"])
+            at_dst = (moved & (v["nxt"] == v["dst"])) | is_elec
             # electrical fabric delivers with one-slice transit delay
-            s["t_del"] = jnp.where(at_dst, jnp.where(is_elec, t + 1, t), s["t_del"])
-            # reorder accounting
-            dseq = jnp.where(at_dst, j["seq"], -1)
-            prev_max = s["max_seq"][j["flow"]]
-            s["reorder"] = s["reorder"] + jnp.sum(at_dst & (j["seq"] < prev_max))
-            s["max_seq"] = s["max_seq"].at[j["flow"]].max(dseq)
-            s["loc"] = jnp.where(at_dst, DELIVERED, newloc)
-            s["nhops"] = s["nhops"] + admitted.astype(jnp.int32)
+            v["t_del"] = jnp.where(at_dst, jnp.where(is_elec, t + 1, t),
+                                   v["t_del"])
+
+            # reorder accounting (deliveries are capacity-bounded per hop, so
+            # the compact path is the common case even for a full-width view)
+            Pv = v["loc"].shape[0]
+
+            def _re_small(ms):
+                max_seq, reorder = ms
+                i2 = _compact_idx(at_dst, SMALL_C)
+                ok2 = i2 < Pv
+                ci = jnp.clip(i2, 0, Pv - 1)
+                fl = jnp.where(ok2, v["flow"][ci], 0)
+                sq = jnp.where(ok2, v["seq"][ci], -1)
+                prev = max_seq[fl]
+                reorder = reorder + jnp.sum(ok2 & (sq < prev))
+                return max_seq.at[fl].max(jnp.where(ok2, sq, -1)), reorder
+
+            def _re_full(ms):
+                max_seq, reorder = ms
+                prev = max_seq[v["flow"]]
+                reorder = reorder + jnp.sum(at_dst & (v["seq"] < prev))
+                return max_seq.at[jnp.where(at_dst, v["flow"], 0)].max(
+                    jnp.where(at_dst, v["seq"], -1)), reorder
+
+            if Pv <= SMALL_C:
+                s["max_seq"], s["reorder"] = _re_full((s["max_seq"], s["reorder"]))
+            else:
+                s["max_seq"], s["reorder"] = jax.lax.cond(
+                    jnp.sum(at_dst) <= SMALL_C, _re_small, _re_full,
+                    (s["max_seq"], s["reorder"]))
+
+            v["loc"] = jnp.where(at_dst, DELIVERED, newloc)
+            v["nhops"] = v["nhops"] + admitted.astype(jnp.int32)
             # transit lookup at the new node
             in_transit = moved & ~at_dst
             nxt_t, off_t = _lookup(j["tf_next"], j["tf_dep"], t,
-                                   jnp.clip(s["loc"], 0, N - 1), j["dst"], h)
-            s["nxt"] = jnp.where(in_transit, nxt_t, s["nxt"])
-            s["dep"] = jnp.where(in_transit, t + off_t, s["dep"])
+                                   jnp.clip(v["loc"], 0, N - 1), v["dst"],
+                                   v["h"], cfg.lookup_impl)
+            v["nxt"] = jnp.where(in_transit, nxt_t, v["nxt"])
+            v["dep"] = jnp.where(in_transit, t + off_t, v["dep"])
             # buffer-overflow drops on arrival at a new switch; a rejection
-            # also pushes the sender back (paper §5.2: "it and all subsequent
-            # packets to that queue should be rejected")
-            arr_sz = jax.ops.segment_sum(jnp.where(in_transit, j["size"], 0),
-                                         jnp.clip(s["loc"], 0, N - 1), num_segments=N)
-            buf_now = buf_now + arr_sz
-            overflow = in_transit & (buf_now[jnp.clip(s["loc"], 0, N - 1)] > cfg.switch_buffer)
+            # also pushes the sender back (paper §5.2)
+            buf_now = _scatter_add_masked(buf_now, jnp.clip(v["loc"], 0, N - 1),
+                                          v["size"], in_transit)
+            overflow = in_transit & \
+                (buf_now[jnp.clip(v["loc"], 0, N - 1)] > cfg.switch_buffer)
             if cfg.pushback:
                 upd = jnp.where(overflow, t + T, 0)
                 s["block_until"] = s["block_until"].at[
-                    j["dst"], s["dep"] % T].max(upd)
-            s["loc"] = jnp.where(overflow, DROPPED, s["loc"])
-            s, _full = enqueue_checks(s, t, in_transit & ~overflow,
-                                      jnp.where(in_transit, off_t, 0))
+                    jnp.where(overflow, v["dst"], 0), v["dep"] % T].max(upd)
+            v["loc"] = jnp.where(overflow, DROPPED, v["loc"])
+            arrived = in_transit & ~overflow
+            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_t),
+                                           v["size"], arrived & (off_t > 0))
+            s, v = enqueue_checks(s, v, arrived, jnp.where(in_transit, off_t, 0))
+            return s, v, used, buf_now, backlog_min
+
+        backlog_min = jnp.full((NKEY,), P, jnp.int32)
+        for _hop in range(cfg.hops_per_slice):
+            want0 = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
+                    (s["nhops"] < cfg.max_hops)
+            if not cfg.pushback:
+                key_all = jnp.clip(s["loc"], 0, N - 1) * (N + 1) + \
+                    jnp.clip(s["nxt"], 0, N)
+                want0 &= pid < backlog_min[key_all]
+            cnt0 = jnp.sum(want0)
+
+            def hop_full(carry, want0=want0):
+                s, used, buf_now, backlog_min = carry
+                v, idx = make_view(s, HOP_FIELDS, None,
+                                   dict(active=want0), None)
+                v["gidx"] = pid
+                s, v, used, buf_now, backlog_min = hop_logic(
+                    dict(s), v, used, buf_now, backlog_min)
+                return write_view(s, v, HOP_FIELDS, idx), used, buf_now, backlog_min
+
+            def hop_compact(C, want0=want0):
+                def fn(carry, C=C, want0=want0):
+                    s, used, buf_now, backlog_min = carry
+                    v, idx = make_view(s, HOP_FIELDS, want0, {}, C)
+                    v["active"] = v.pop("_ok")
+                    v["gidx"] = jnp.minimum(idx, P).astype(jnp.int32)
+                    s, v, used, buf_now, backlog_min = hop_logic(
+                        dict(s), v, used, buf_now, backlog_min)
+                    return write_view(s, v, HOP_FIELDS, idx), used, buf_now, backlog_min
+                return fn
+
+            hop_fn = hop_full
+            for c in TIERS[::-1]:
+                hop_fn = (lambda carry, cc=c, inner=hop_fn:
+                          jax.lax.cond(cnt0 <= cc, hop_compact(cc), inner, carry))
+            s, used, buf_now, backlog_min = jax.lax.cond(
+                cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
+                (s, used, buf_now, backlog_min))
 
         # -- 4. handle packets that missed their slice ----------------------
         missed = (s["loc"] >= 0) & (s["dep"] == t)
         miss_cnt = jnp.sum(missed)
-        if cfg.cc_detect:
-            s["relook"] = s["relook"] | missed
-            s["dep"] = jnp.where(missed, t + 1, s["dep"])
-        else:
-            # paused a full cycle in the calendar queue (paper §5.2)
-            s["dep"] = jnp.where(missed, t + T, s["dep"])
-        if cfg.pushback:
-            upd = jnp.where(missed, t + T, 0)
-            s["block_until"] = s["block_until"].at[j["dst"], t % T].max(upd)
 
-        # -- 5. per-slice stats --------------------------------------------
-        waiting = (s["loc"] >= 0) & (s["dep"] > t)
-        horizon_ok = (s["dep"] - t <= cfg.offload_horizon) if cfg.offload \
-            else jnp.ones_like(waiting)
-        seg = jnp.where(waiting, s["loc"], N)
-        on_sw = jax.ops.segment_sum(jnp.where(waiting & horizon_ok, j["size"], 0),
-                                    seg, num_segments=N + 1)[:N]
-        off_sw = jax.ops.segment_sum(jnp.where(waiting & ~horizon_ok, j["size"], 0),
-                                     seg, num_segments=N + 1)[:N]
+        def missed_body(s):
+            s = dict(s)
+            bump = t + 1 if cfg.cc_detect else t + T  # paused a cycle (§5.2)
+            if cfg.cc_detect:
+                s["relook"] = s["relook"] | missed
+            s["occ"] = _scatter_add_masked(
+                s["occ"], jnp.clip(s["loc"], 0, N - 1) * T2 + bump % T2,
+                j["size"], missed)
+            s["dep"] = jnp.where(missed, bump, s["dep"])
+            if cfg.pushback:
+                upd = jnp.where(missed, t + T, 0)
+                s["block_until"] = s["block_until"].at[j["dst"], t % T].max(upd)
+            return s
+
+        s = jax.lax.cond(miss_cnt > 0, missed_body, lambda s: dict(s), s)
+
+        # -- 5. per-slice stats (column sums of the occupancy map) ----------
+        on_sw = on_switch_bytes(s["occ"])
+        if cfg.offload:
+            off_sw = s["occ"].reshape(N, T2).sum(axis=1) - on_sw
+        else:
+            off_sw = jnp.zeros_like(on_sw)
         stats = dict(
             delivered_bytes=jnp.sum(jnp.where(s["t_del"] == t, j["size"], 0)),
             dropped=jnp.sum(s["loc"] == DROPPED),

@@ -13,6 +13,29 @@ per-hop time-flow tables (paper §3), the dense lowering of Fig. 3:
 ``inj_*`` tables are the *injection* (host/source) tables and ``tf_*`` the
 transit (switch) tables — the host/ToR split of the paper's testbed; VLB
 sprays at injection and runs direct-circuit at transit.
+
+Compile pipeline (hot path, vectorized for 108-ToR-and-beyond scale)
+--------------------------------------------------------------------
+The TO compilers never iterate per (slice, node, destination) in Python:
+
+1. ``_time_dp_all`` runs the backward time-expanded DP for *all* destinations
+   at once — the cost tensor is ``[H+1, N, D]`` (horizon H = 2T so waits may
+   wrap the cyclic schedule) and each DP sweep step is one batched gather +
+   minimum over the uplink axis.
+2. ``_dp_tables`` collects the equal-cost departure options (UCMP slots)
+   without per-entry while-walks: because waiting is free, ``cost`` is
+   non-decreasing in t, so the wait-chain from any start slice is exactly the
+   *run* of equal cost values along the time axis. Every (slice, uplink)
+   "match" event is enumerated once with ``np.nonzero``, ranked inside its
+   run by cumulative-sum arithmetic, and scattered into the k-slot tables for
+   every start slice it serves.
+3. ``direct``/``first_direct_offsets`` reduce "wait for the next circuit" to
+   a reversed ``minimum.accumulate`` (suffix-min) over a doubled schedule
+   cycle; ``opera`` runs a batched all-destination Bellman/BFS over ``conn``
+   instead of per-slice networkx searches.
+
+Golden-equivalence tests against the original loop implementations live in
+``tests/test_routing_golden.py``.
 """
 from __future__ import annotations
 
@@ -36,6 +59,7 @@ __all__ = [
     "neighbors",
     "earliest_path",
     "add_entry",
+    "first_direct_offsets",
 ]
 
 INF = np.int64(1 << 40)
@@ -172,6 +196,32 @@ def _dp_B(sched: Schedule, max_hop: int) -> np.int64:
     return np.int64((max_hop + H) * (H + 2) + 1)
 
 
+def _time_dp_all(sched: Schedule, max_hop: int):
+    """Backward DP over the time-expanded graph, batched over *all*
+    destinations: ``cost[t, n, d]`` with the same recurrence and metric as
+    :func:`_time_dp`. Each sweep step is one gather + minimum per uplink."""
+    T, N, U = sched.conn.shape
+    H = 2 * T
+    B = _dp_B(sched, max_hop)
+    diag = np.arange(N)
+    cost = np.full((H + 1, N, N), INF, dtype=np.int64)
+    cost[H, diag, diag] = H * B
+    for t in range(H - 1, -1, -1):
+        c = cost[t + 1].copy()  # waiting one slice is free in hops
+        nxt = cost[t + 1]
+        conn_t = sched.conn[t % T]  # [N, U]
+        for k in range(U):
+            peer = conn_t[:, k]
+            ok = peer >= 0
+            pc = nxt[np.clip(peer, 0, N - 1)]            # [N, D]
+            pc = np.where(peer[:, None] == diag[None, :], t * B, pc)
+            cand = np.where(ok[:, None], pc + 1, INF)
+            np.minimum(c, cand, out=c)
+        cost[t] = c
+        cost[t, diag, diag] = t * B
+    return cost, H
+
+
 def _hop_matches(sched: Schedule, cost, B, dst: int, n: int, tt: int,
                  target_cost) -> list[int]:
     """Peers m such that departing n -> m in slice tt achieves target_cost."""
@@ -212,31 +262,81 @@ def _dp_tables(sched: Schedule, max_hop: int, kpaths: int):
     For each (t, n, d) we fill up to ``kpaths`` (egress, dep-offset) actions
     achieving the optimal (arrival slice, hops) cost — UCMP's uniform-cost
     set; slot 0 alone is the HOHO single earliest path.
+
+    Vectorized equal-cost slot collection: since waiting is free, ``cost`` is
+    non-decreasing along t, so the wait-chain reachable from start slice t is
+    the maximal *run* of equal cost values containing t. A "match event" is a
+    (slice tt, uplink u) pair whose hop attains the run's optimal cost; the
+    event ranked r within its run (counting (tt, u) lexicographically) fills
+    slot ``r - Pex[t]`` for every start t in the run with ``Pex[t]`` events
+    before it, where Pex is the run-local exclusive event count. All events
+    are enumerated with one ``np.nonzero`` and scattered at once.
     """
     T, N, U = sched.conn.shape
     B = _dp_B(sched, max_hop)
+    cost, H = _time_dp_all(sched, max_hop)              # [H+1, N, D]
+    diag = np.arange(N)
+    tts = np.arange(H)
     tf_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
     tf_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
-    for d in range(N):
-        cost, H = _time_dp(sched, d, max_hop)
-        for t in range(T):
-            for n in range(N):
-                if n == d or cost[t, n] >= INF:
-                    continue
-                c_opt = cost[t, n]
-                slot = 0
-                tt = t
-                # walk forward in time collecting equal-cost departure options
-                while tt < H and slot < kpaths:
-                    for m in _hop_matches(sched, cost, B, d, n, tt, c_opt):
-                        if slot < kpaths:
-                            tf_next[t, n, d, slot] = m
-                            tf_dep[t, n, d, slot] = tt - t
-                            slot += 1
-                    if tt + 1 <= H and cost[tt + 1, n] == c_opt:
-                        tt += 1
-                    else:
-                        break
+
+    peer = sched.conn[tts % T]                          # [H, N, U]
+    ok = peer >= 0
+    dup = np.zeros_like(ok)                             # same peer, earlier uplink
+    for u in range(1, U):
+        for u2 in range(u):
+            dup[:, :, u] |= ok[:, :, u] & (peer[:, :, u2] == peer[:, :, u])
+    pclip = np.clip(peer, 0, N - 1)
+    # val[tt, n, u, d] = metric of hopping n -> peer at tt, bound for dst d
+    val = cost[1:][tts[:, None, None], pclip]           # cost[tt+1, peer, d]
+    val = np.where(peer[..., None] == diag, (tts * B)[:, None, None, None], val)
+    match = (ok & ~dup)[..., None] & (val + 1 == cost[:H, :, None, :])
+    del val
+
+    # runs of equal cost along the time axis, per (n, d) column
+    c0 = cost[:H]
+    newrun = np.ones((H, N, N), dtype=bool)
+    newrun[1:] = c0[1:] != c0[:-1]
+    run_start = np.where(newrun, tts[:, None, None], 0)
+    np.maximum.accumulate(run_start, axis=0, out=run_start)
+
+    M = match.sum(axis=2, dtype=np.int64)               # events per slice [H, N, D]
+    Gex = np.cumsum(M, axis=0) - M                      # exclusive, per column
+    Gex_start = np.take_along_axis(Gex, run_start, axis=0)
+
+    # events sorted by (n, d, tt, u): nonzero on the transposed tensor
+    n_e, d_e, tt_e, u_e = np.nonzero(match.transpose(1, 3, 0, 2))
+    if n_e.size == 0:
+        return tf_next, tf_dep
+    peer_e = peer[tt_e, n_e, u_e]
+    tot = match.sum(axis=(0, 2), dtype=np.int64)        # [N, D] events per column
+    colstart = (np.cumsum(tot.ravel()) - tot.ravel()).reshape(N, N)
+    cs_e = colstart[n_e, d_e]
+    j_e = np.arange(n_e.size) - cs_e                    # event index in column
+    gst_e = Gex_start[tt_e, n_e, d_e]
+    r_e = j_e - gst_e                                   # run-local event rank
+    rs_e = run_start[tt_e, n_e, d_e]
+
+    # earliest start slice this event serves with slot < kpaths: one past the
+    # (r - kpaths)-th run-local event (tt_e doubles as the per-column event
+    # position list, so that event's slice is a single gather away)
+    thresh = r_e - kpaths + 1
+    prev_idx = np.clip(cs_e + gst_e + r_e - kpaths, 0, n_e.size - 1)
+    ta = np.where(thresh <= 0, rs_e, tt_e[prev_idx] + 1)
+    tb = np.minimum(tt_e, T - 1)
+    cnt = np.maximum(tb - ta + 1, 0)
+
+    cum = np.cumsum(cnt)
+    total = int(cum[-1])
+    if total == 0:
+        return tf_next, tf_dep
+    eidx = np.repeat(np.arange(n_e.size), cnt)
+    offs = np.arange(total) - np.repeat(cum - cnt, cnt)
+    t_w = (ta[eidx] + offs).astype(np.int64)
+    n_w, d_w = n_e[eidx], d_e[eidx]
+    s_w = r_e[eidx] - (Gex[t_w, n_w, d_w] - gst_e[eidx])
+    tf_next[t_w, n_w, d_w, s_w] = peer_e[eidx]
+    tf_dep[t_w, n_w, d_w, s_w] = tt_e[eidx] - t_w
     return tf_next, tf_dep
 
 
@@ -244,25 +344,38 @@ def _dp_tables(sched: Schedule, max_hop: int, kpaths: int):
 # TO routing algorithms
 # ---------------------------------------------------------------------------
 
+def _has_circuit_grid(sched: Schedule) -> np.ndarray:
+    """has[t, n, d]: a circuit n -> d is up in slice t."""
+    T, N, U = sched.conn.shape
+    has = np.zeros((T, N, N), dtype=bool)
+    t_i, n_i, u_i = np.nonzero(sched.conn >= 0)
+    has[t_i, n_i, sched.conn[t_i, n_i, u_i]] = True
+    return has
+
+
+def first_direct_offsets(sched: Schedule) -> np.ndarray:
+    """first[t, n, d]: slices to wait at node n (from slice t) until the next
+    direct circuit n -> d; -1 if the schedule never provides one. Computed as
+    a suffix-minimum over a doubled schedule cycle (no per-offset search)."""
+    has = _has_circuit_grid(sched)
+    T = has.shape[0]
+    NEVER = np.int64(1) << 30
+    has2 = np.concatenate([has, has], axis=0)            # [2T, N, N]
+    nxt = np.where(has2, np.arange(2 * T, dtype=np.int64)[:, None, None], NEVER)
+    nxt = np.minimum.accumulate(nxt[::-1], axis=0)[::-1]
+    off = nxt[:T] - np.arange(T, dtype=np.int64)[:, None, None]
+    return np.where(nxt[:T] >= NEVER, -1, off).astype(np.int32)
+
+
 def direct(sched: Schedule, **_) -> CompiledRouting:
     """Direct-circuit routing: hold every packet at its source until the
     one-hop circuit to its destination appears (paper Fig. 3a)."""
     T, N, U = sched.conn.shape
-    tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
-    tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
-    # first_at[t, n, d] = offset to the next slice >= t with a circuit n -> d
-    has = np.zeros((T, N, N), dtype=bool)
-    for t in range(T):
-        for k in range(U):
-            peer = sched.conn[t, :, k]
-            ok = peer >= 0
-            has[t, np.arange(N)[ok], peer[ok]] = True
-    for t in range(T):
-        for off in range(T):
-            tt = (t + off) % T
-            newly = has[tt] & (tf_next[t, :, :, 0] < 0)
-            tf_next[t, :, :, 0] = np.where(newly, np.arange(N)[None, :], tf_next[t, :, :, 0])
-            tf_dep[t, :, :, 0] = np.where(newly, off, tf_dep[t, :, :, 0])
+    fd = first_direct_offsets(sched)                     # [T, N, N]
+    found = fd >= 0
+    tf_next = np.where(found, np.arange(N, dtype=np.int32)[None, None, :],
+                       np.int32(-1))[..., None]
+    tf_dep = np.where(found, fd, 0).astype(np.int32)[..., None]
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
 
 
@@ -273,21 +386,24 @@ def vlb(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
     destination. Direct shortcut taken when the source already sees dst."""
     base = direct(sched)
     T, N, U = sched.conn.shape
+    diag = np.arange(N)
     inj_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
     inj_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
-    for t in range(T):
-        for n in range(N):
-            peers = [int(m) for m in sched.conn[t, n] if m >= 0]
-            for d in range(N):
-                if d == n:
-                    continue
-                if d in peers:  # direct shortcut
-                    inj_next[t, n, d, 0] = d
-                    continue
-                for s, m in enumerate(p for p in peers if p != d):
-                    if s >= kpaths:
-                        break
-                    inj_next[t, n, d, s] = m
+    peer = sched.conn                                    # [T, N, U]
+    ok = peer >= 0
+    is_peer = _has_circuit_grid(sched)                   # [T, N, D]
+    nd_ok = diag[:, None] != diag[None, :]               # n != d
+    # spray slots: current peers != d in uplink order (duplicates kept, as in
+    # the packet-spraying list); exclusive cumsum ranks them per (t, n, d)
+    validu = ok[:, :, :, None] & (peer[:, :, :, None] != diag) \
+        & nd_ok[None, :, None, :]
+    rank = np.cumsum(validu, axis=2) - validu
+    sel = validu & (rank < kpaths) & ~is_peer[:, :, None, :]
+    t_i, n_i, u_i, d_i = np.nonzero(sel)
+    inj_next[t_i, n_i, d_i, rank[t_i, n_i, u_i, d_i]] = peer[t_i, n_i, u_i]
+    # direct shortcut: d is a current peer -> single slot straight to d
+    t_i, n_i, d_i = np.nonzero(is_peer & nd_ok[None])
+    inj_next[t_i, n_i, d_i, 0] = d_i
     return CompiledRouting(base.tf_next, base.tf_dep, inj_next, inj_dep,
                            multipath="packet")
 
@@ -299,25 +415,26 @@ def opera(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
     T, N, U = sched.conn.shape
     tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
     tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    diag = np.arange(N)
+    rows = diag[:, None]
+    BIG = np.int32(1 << 20)
     for t in range(T):
-        g = nx.DiGraph()
-        g.add_nodes_from(range(N))
-        for n in range(N):
-            for k in range(U):
-                m = sched.conn[t, n, k]
-                if m >= 0:
-                    g.add_edge(n, int(m))
-        for d in range(N):
-            # BFS tree towards d gives the next hop on a shortest path
-            lengths = nx.single_target_shortest_path_length(g, d)
-            dist = {n: l for n, l in lengths.items()}
-            for n in range(N):
-                if n == d or n not in dist or dist[n] > max_hop:
-                    continue
-                for m in g.successors(n):
-                    if dist.get(m, INF) == dist[n] - 1:
-                        tf_next[t, n, d, 0] = m
-                        break
+        peer = sched.conn[t]                             # [N, U]
+        ok = peer >= 0
+        pclip = np.clip(peer, 0, N - 1)
+        # batched multi-destination BFS: max_hop synchronous Bellman rounds
+        # give exact distances <= max_hop (farther pairs stay at BIG)
+        dist = np.full((N, N), BIG, np.int32)            # dist[n, d]
+        dist[diag, diag] = 0
+        for _ in range(max_hop):
+            nd = np.where(ok[:, :, None], dist[pclip], BIG)   # [N, U, D]
+            np.minimum(dist, 1 + nd.min(axis=1), out=dist)
+        # next hop: first uplink whose peer is one step closer to d
+        nd = np.where(ok[:, :, None], dist[pclip], BIG)
+        good = nd == (dist[:, None, :] - 1)
+        usable = (dist > 0) & (dist <= max_hop) & good.any(axis=1)
+        first_u = np.argmax(good, axis=1)                # [N, D]
+        tf_next[t, :, :, 0] = np.where(usable, peer[rows, first_u], -1)
     # Unreachable-in-slice pairs fall back to waiting for a direct circuit.
     fallback = direct(sched)
     missing = tf_next[:, :, :, 0] < 0

@@ -43,12 +43,22 @@ def _kernel(tbl_next_ref, tbl_dep_ref, node_ref, dst_ref, hash_ref,
 def time_flow_lookup(tbl_next, tbl_dep, node, dst, hashv, *, bp: int = 1024,
                      interpret: bool = True):
     """tbl_*: [N, D, K] int32 (this slice's tables); node/dst: [P] int32;
-    hashv: [P] uint32. Returns (next_hop [P], dep_offset [P])."""
+    hashv: [P] uint32. Returns (next_hop [P], dep_offset [P]).
+
+    Arbitrary packet counts are supported: the packet vector is padded to a
+    multiple of the ``bp`` block size (padding rows look up entry (0, 0),
+    which always exists) and the outputs are sliced back to ``P``.
+    """
     N, D, K = tbl_next.shape
     P = node.shape[0]
     bp = min(bp, P)
-    assert P % bp == 0, (P, bp)
-    grid = (P // bp,)
+    Ppad = -(-P // bp) * bp
+    if Ppad != P:
+        padn = Ppad - P
+        node = jnp.pad(node, (0, padn))
+        dst = jnp.pad(dst, (0, padn))
+        hashv = jnp.pad(hashv, (0, padn))
+    grid = (Ppad // bp,)
     nxt, dep = pl.pallas_call(
         functools.partial(_kernel, K=K),
         grid=grid,
@@ -64,9 +74,9 @@ def time_flow_lookup(tbl_next, tbl_dep, node, dst, hashv, *, bp: int = 1024,
             pl.BlockSpec((bp,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((P,), jnp.int32),
-            jax.ShapeDtypeStruct((P,), jnp.int32),
+            jax.ShapeDtypeStruct((Ppad,), jnp.int32),
+            jax.ShapeDtypeStruct((Ppad,), jnp.int32),
         ],
         interpret=interpret,
     )(tbl_next, tbl_dep, node, dst, hashv)
-    return nxt, dep
+    return nxt[:P], dep[:P]

@@ -1,0 +1,231 @@
+"""Golden-equivalence tests: the vectorized routing compilers must reproduce
+the original loop implementations (kept here as ``_ref_*``) bit-for-bit on
+random small schedules. ``_ref_opera`` carries a one-line fix (wrapping the
+networkx generator in ``dict``) — the seed version crashed on networkx >= 3.
+
+No hypothesis dependency: plain seeded ``numpy.random`` sweeps.
+"""
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core import direct, hoho, opera, round_robin, ucmp, vlb
+from repro.core.routing import (INF, CompiledRouting, _dp_B, _time_dp,
+                                _time_dp_all, first_direct_offsets)
+from repro.core.topology import Schedule
+
+# ---------------------------------------------------------------------------
+# Reference (seed) loop implementations
+# ---------------------------------------------------------------------------
+
+
+def _ref_hop_matches(sched, cost, B, dst, n, tt, target_cost):
+    T = sched.num_slices
+    out = []
+    for k in range(sched.num_uplinks):
+        m = sched.conn[tt % T, n, k]
+        if m < 0:
+            continue
+        val = (tt * B if m == dst else cost[tt + 1, m]) + 1
+        if val == target_cost and m not in out:
+            out.append(int(m))
+    return out
+
+
+def _ref_dp_tables(sched, max_hop, kpaths):
+    T, N, U = sched.conn.shape
+    B = _dp_B(sched, max_hop)
+    tf_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
+    for d in range(N):
+        cost, H = _time_dp(sched, d, max_hop)
+        for t in range(T):
+            for n in range(N):
+                if n == d or cost[t, n] >= INF:
+                    continue
+                c_opt = cost[t, n]
+                slot = 0
+                tt = t
+                while tt < H and slot < kpaths:
+                    for m in _ref_hop_matches(sched, cost, B, d, n, tt, c_opt):
+                        if slot < kpaths:
+                            tf_next[t, n, d, slot] = m
+                            tf_dep[t, n, d, slot] = tt - t
+                            slot += 1
+                    if tt + 1 <= H and cost[tt + 1, n] == c_opt:
+                        tt += 1
+                    else:
+                        break
+    return tf_next, tf_dep
+
+
+def _ref_direct(sched):
+    T, N, U = sched.conn.shape
+    tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    has = np.zeros((T, N, N), dtype=bool)
+    for t in range(T):
+        for k in range(U):
+            peer = sched.conn[t, :, k]
+            ok = peer >= 0
+            has[t, np.arange(N)[ok], peer[ok]] = True
+    for t in range(T):
+        for off in range(T):
+            tt = (t + off) % T
+            newly = has[tt] & (tf_next[t, :, :, 0] < 0)
+            tf_next[t, :, :, 0] = np.where(newly, np.arange(N)[None, :],
+                                           tf_next[t, :, :, 0])
+            tf_dep[t, :, :, 0] = np.where(newly, off, tf_dep[t, :, :, 0])
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
+
+
+def _ref_first_direct(sched):
+    T, N, U = sched.conn.shape
+    has = np.zeros((T, N, N), dtype=bool)
+    for t in range(T):
+        for k in range(U):
+            peer = sched.conn[t, :, k]
+            ok = peer >= 0
+            has[t, np.arange(N)[ok], peer[ok]] = True
+    fd = np.full((T, N, N), -1, dtype=np.int32)
+    for t in range(T):
+        for off in range(T):
+            tt = (t + off) % T
+            newly = has[tt] & (fd[t] < 0)
+            fd[t] = np.where(newly, off, fd[t])
+    return fd
+
+
+def _ref_vlb(sched, kpaths=4):
+    base = _ref_direct(sched)
+    T, N, U = sched.conn.shape
+    inj_next = np.full((T, N, N, kpaths), -1, dtype=np.int32)
+    inj_dep = np.zeros((T, N, N, kpaths), dtype=np.int32)
+    for t in range(T):
+        for n in range(N):
+            peers = [int(m) for m in sched.conn[t, n] if m >= 0]
+            for d in range(N):
+                if d == n:
+                    continue
+                if d in peers:
+                    inj_next[t, n, d, 0] = d
+                    continue
+                for s, m in enumerate(p for p in peers if p != d):
+                    if s >= kpaths:
+                        break
+                    inj_next[t, n, d, s] = m
+    return CompiledRouting(base.tf_next, base.tf_dep, inj_next, inj_dep,
+                           multipath="packet")
+
+
+def _ref_opera(sched, max_hop=4):
+    T, N, U = sched.conn.shape
+    tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
+    tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    for t in range(T):
+        g = nx.DiGraph()
+        g.add_nodes_from(range(N))
+        for n in range(N):
+            for k in range(U):
+                m = sched.conn[t, n, k]
+                if m >= 0:
+                    g.add_edge(n, int(m))
+        for d in range(N):
+            dist = dict(nx.single_target_shortest_path_length(g, d))
+            for n in range(N):
+                if n == d or n not in dist or dist[n] > max_hop:
+                    continue
+                for m in g.successors(n):
+                    if dist.get(m, INF) == dist[n] - 1:
+                        tf_next[t, n, d, 0] = m
+                        break
+    fallback = _ref_direct(sched)
+    missing = tf_next[:, :, :, 0] < 0
+    tf_next[:, :, :, 0] = np.where(missing, fallback.tf_next[:, :, :, 0],
+                                   tf_next[:, :, :, 0])
+    tf_dep[:, :, :, 0] = np.where(missing, fallback.tf_dep[:, :, :, 0],
+                                  tf_dep[:, :, :, 0])
+    return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
+
+
+# ---------------------------------------------------------------------------
+# Schedule generators
+# ---------------------------------------------------------------------------
+
+
+def _random_sched(rng, n, T, U, fill=0.7):
+    """Random directed circuit schedule (no self-circuits; dark links)."""
+    conn = rng.integers(0, n, size=(T, n, U)).astype(np.int32)
+    # remap self-circuits to the next node
+    self_loop = conn == np.arange(n, dtype=np.int32)[None, :, None]
+    conn = np.where(self_loop, (conn + 1) % n, conn)
+    dark = rng.random(size=conn.shape) > fill
+    conn = np.where(dark, np.int32(-1), conn)
+    return Schedule(conn)
+
+
+def _schedules():
+    rng = np.random.default_rng(7)
+    scheds = [round_robin(6, 1), round_robin(8, 2), round_robin(9, 3)]
+    for n, T, U in [(5, 3, 1), (6, 4, 2), (7, 5, 3), (9, 6, 2), (4, 2, 2)]:
+        scheds.append(_random_sched(rng, n, T, U))
+    return scheds
+
+
+def _assert_routing_equal(a, b):
+    np.testing.assert_array_equal(a.tf_next, b.tf_next)
+    np.testing.assert_array_equal(a.tf_dep, b.tf_dep)
+    np.testing.assert_array_equal(a.inj_next, b.inj_next)
+    np.testing.assert_array_equal(a.inj_dep, b.inj_dep)
+    assert a.multipath == b.multipath
+
+
+# ---------------------------------------------------------------------------
+# Tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_time_dp_all_matches_per_destination(i):
+    sched = _schedules()[i]
+    cost_all, H = _time_dp_all(sched, max_hop=4)
+    for d in range(sched.num_nodes):
+        cost, H2 = _time_dp(sched, d, 4)
+        assert H == H2
+        np.testing.assert_array_equal(cost_all[:, :, d], cost)
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+@pytest.mark.parametrize("kpaths", [1, 2, 4])
+def test_dp_tables_golden(i, kpaths):
+    sched = _schedules()[i]
+    alg = hoho if kpaths == 1 else ucmp
+    got = alg(sched) if kpaths == 1 else ucmp(sched, kpaths=kpaths)
+    ref_next, ref_dep = _ref_dp_tables(sched, max_hop=4, kpaths=kpaths)
+    np.testing.assert_array_equal(got.tf_next, ref_next)
+    np.testing.assert_array_equal(got.tf_dep, ref_dep)
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_direct_golden(i):
+    sched = _schedules()[i]
+    _assert_routing_equal(direct(sched), _ref_direct(sched))
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_first_direct_offsets_golden(i):
+    sched = _schedules()[i]
+    np.testing.assert_array_equal(first_direct_offsets(sched),
+                                  _ref_first_direct(sched))
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_vlb_golden(i):
+    sched = _schedules()[i]
+    _assert_routing_equal(vlb(sched), _ref_vlb(sched))
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_opera_golden(i):
+    sched = _schedules()[i]
+    _assert_routing_equal(opera(sched), _ref_opera(sched))
