@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.core import (FabricConfig, FabricTables, direct, round_robin,
-                        synthesize, ucmp)
+from repro.core import (FabricConfig, FabricTables, ReconfigConfig, direct,
+                        reconfigure, round_robin, synthesize, ucmp)
+from repro.core import routing_jnp
 from repro.core.fabric import simulate
 from .common import timed
 
@@ -75,6 +76,41 @@ def run(quick: bool = False):
     dt = time.time() - t0
     rows.append((f"route_direct_compile_{n_route}", dt * 1e6,
                  f"{rd.tf_next.size/dt/1e6:.1f}Mentry/s"))
+
+    # route_recompile: host vs. on-device table compilation, plus the jitted
+    # traffic-aware reconfiguration loop that recompiles inside lax.scan
+    # (repro.core.reconfigure) — the TA scenario class of the paper's case
+    # studies. Host row repeats the ucmp timing above under the comparable
+    # name; the device row is the warm jitted repro.core.routing_jnp path.
+    t0 = time.time()
+    ucmp(sched_r)
+    dt_host = time.time() - t0
+    rows.append((f"route_recompile_host_{n_route}", dt_host * 1e6,
+                 f"{ent/dt_host/1e6:.1f}Mentry/s"))
+    conn = jnp.asarray(sched_r.conn)
+    f_dev = jax.jit(lambda c: routing_jnp.compile_tables(c, "ucmp"))
+    jax.block_until_ready(f_dev(conn))  # warm compile
+    iters = 2 if quick else 3
+    t0 = time.time()
+    for _ in range(iters):
+        out = f_dev(conn)
+    jax.block_until_ready(out)
+    dt_dev = (time.time() - t0) / iters
+    rows.append((f"route_recompile_jnp_{n_route}", dt_dev * 1e6,
+                 f"{ent/dt_dev/1e6:.1f}Mentry/s ({dt_host/dt_dev:.1f}x host)"))
+
+    wl_r = synthesize("rpc", n_route, 32, slice_bytes=75_000, load=0.3,
+                      max_packets=4096, seed=1)
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=2, scheme="hoho",
+                          k_hot=4)
+    cfg_r = FabricConfig()
+    reconfigure(sched_r, wl_r, cfg_r, rcfg)  # warm compile
+    t0 = time.time()
+    reconfigure(sched_r, wl_r, cfg_r, rcfg)
+    dt = time.time() - t0
+    S_r = rcfg.num_epochs * rcfg.epoch_slices
+    rows.append((f"route_recompile_loop_{n_route}", dt / S_r * 1e6,
+                 f"{S_r/dt:.1f}slice/s+{rcfg.num_epochs/dt:.1f}recompile/s"))
 
     # fabric simulator throughput
     n2 = 16

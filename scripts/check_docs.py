@@ -1,0 +1,73 @@
+"""Docs health check: validate internal links and (optionally) execute the
+fenced python snippets in ``docs/quickstart.md``.
+
+    python scripts/check_docs.py             # link check only
+    python scripts/check_docs.py --snippets  # + run quickstart snippets
+
+Used by the CI docs job and by ``tests/test_docs.py`` so the docs cannot
+silently rot: every relative link must resolve inside the repo, and every
+quickstart snippet must run (snippets execute cumulatively in one
+namespace, top to bottom, exactly as a reader would).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def doc_files() -> list[pathlib.Path]:
+    return sorted((REPO / "docs").rglob("*.md")) + [REPO / "README.md"]
+
+
+def check_links() -> list[str]:
+    """Every relative markdown link in docs/ and README.md must resolve."""
+    errors = []
+    for md in doc_files():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def quickstart_snippets() -> list[str]:
+    return FENCE_RE.findall((REPO / "docs" / "quickstart.md").read_text())
+
+
+def run_snippets() -> None:
+    """Execute the quickstart's python snippets cumulatively."""
+    sys.path.insert(0, str(REPO / "src"))
+    ns: dict = {}
+    for i, snip in enumerate(quickstart_snippets()):
+        print(f"-- snippet {i + 1} --")
+        exec(compile(snip, f"docs/quickstart.md[{i + 1}]", "exec"), ns)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snippets", action="store_true",
+                    help="also execute docs/quickstart.md python snippets")
+    args = ap.parse_args()
+    errors = check_links()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    n_files = len(doc_files())
+    print(f"link check: {n_files} files, {len(errors)} broken links")
+    if args.snippets:
+        run_snippets()
+        print(f"snippets: {len(quickstart_snippets())} ran clean")
+    if errors:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ from .routing import (CompiledRouting, direct, vlb, opera, ucmp, hoho, ecmp,
 from .timeflow import Entry, TimeFlowTable
 from .fabric import FabricConfig, FabricTables, Workload, SimResult, simulate
 from .net import OpenOpticsNet, clos_routing
+from .reconfigure import ReconfigConfig, ReconfigResult, reconfigure
 from .traces import synthesize, flow_fcts, TRACES
 from .guardband import GuardbandInputs, derive as derive_guardband
 from .eqo import simulate_eqo
@@ -28,6 +29,7 @@ __all__ = [
     "Entry", "TimeFlowTable",
     "FabricConfig", "FabricTables", "Workload", "SimResult", "simulate",
     "OpenOpticsNet", "clos_routing",
+    "ReconfigConfig", "ReconfigResult", "reconfigure",
     "synthesize", "flow_fcts", "TRACES",
     "GuardbandInputs", "derive_guardband",
     "simulate_eqo", "toolkit",

@@ -81,7 +81,33 @@ DROPPED = -3
 
 @dataclasses.dataclass(frozen=True)
 class FabricConfig:
-    """Static fabric parameters (hashable; closed over by the jitted step)."""
+    """Static fabric parameters (hashable; closed over by the jitted step).
+
+    slice_bytes: admissible bytes per circuit per slice — the time-slice
+        capacity quantum (default: 100 Gbps x 6 us).
+    elec_bytes: per-node electrical egress capacity per slice; > 0 enables
+        the packet-switched fabric of hybrid architectures (peer id == N).
+    switch_buffer: per-switch buffer bound; arrivals beyond it drop (and
+        push the sender back when ``pushback``).
+    hops_per_slice: cut-through chaining bound within one slice (Opera).
+    max_hops: lifetime hop bound per packet.
+    cc_detect: congestion detection (§5.2) — packets that miss their slice
+        or hit a full calendar queue defer one slice and re-look-up, instead
+        of stalling a full schedule cycle.
+    pushback: traffic push-back (§5.2) — congested queues block their source
+        slice bucket for a cycle; rejected transmissions defer at the sender.
+    offload / offload_horizon: buffer offloading (§5.2) — only the next
+        ``offload_horizon`` calendar queues stay switch-resident, the rest
+        count as host-offloaded bytes.
+    flow_pausing: hold elephant flows at the host until a direct circuit to
+        their destination appears (§5.2).
+    congestion_threshold: classic CC byte threshold per calendar queue
+        (effective limit is ``min(slice_bytes, congestion_threshold)``).
+    lookup_impl: per-packet table-lookup backend — "jnp" (pure gathers,
+        default), "pallas" (TPU kernel), "pallas-interpret" (kernel body on
+        CPU for validation). All three are bit-identical; see
+        :mod:`repro.kernels.time_flow_lookup`.
+    """
 
     slice_bytes: int = 75_000        # 100 Gbps x 6 us, per circuit per slice
     elec_bytes: int = 0              # electrical egress capacity per node/slice
@@ -305,8 +331,24 @@ def _build_caps_all(conn, cfg: FabricConfig, N: int):
 
 def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
              num_slices: int) -> SimResult:
-    """Run the fabric for ``num_slices`` slices. Everything inside is jitted;
-    re-compilation happens per (packet count, table shapes, config)."""
+    """Run the fabric for ``num_slices`` slices.
+
+    Args:
+        tables: deployed state — the optical schedule ``conn`` plus compiled
+            time-flow tables (``[T, N, D, K]``; see
+            :class:`repro.core.routing.CompiledRouting` for the layout).
+        wl: the packet workload (structure-of-arrays; see :class:`Workload`).
+        cfg: static fabric parameters. ``cfg.lookup_impl`` selects the
+            per-packet table-lookup backend ("jnp" gathers, "pallas" TPU
+            kernel, "pallas-interpret" CPU validation — all bit-identical).
+        num_slices: slices to run (the schedule cycle wraps as needed).
+
+    Everything inside is jitted; re-compilation happens per (packet count,
+    table shapes, config). For a loop that *recompiles the tables on-device
+    mid-run*, see :func:`repro.core.reconfigure.reconfigure` — it reuses this
+    module's per-slice step via :func:`_make_step` with tables swapped in
+    from the scan carry.
+    """
     if cfg.lookup_impl not in ("jnp", "pallas", "pallas-interpret"):
         raise ValueError(f"unknown lookup_impl {cfg.lookup_impl!r}: expected "
                          "'jnp', 'pallas', or 'pallas-interpret'")
@@ -326,15 +368,41 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
     return SimResult(**{k: np.asarray(v) for k, v in out.items()})
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
-def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
-                  num_flows: int):
+def _init_state(j, num_flows: int):
+    """Fresh per-packet scan state for the workload in ``j`` (all packets
+    un-injected, empty calendar queues)."""
+    T, N, U = j["conn"].shape
+    P = j["src"].shape[0]
+    NQ = N * 2 * T
+    return dict(
+        loc=jnp.full((P,), NOT_INJECTED, jnp.int32),
+        nxt=jnp.full((P,), -1, jnp.int32),
+        dep=jnp.zeros((P,), jnp.int32),
+        relook=jnp.zeros((P,), bool),
+        nhops=jnp.zeros((P,), jnp.int32),
+        t_del=jnp.full((P,), -1, jnp.int32),
+        block_until=jnp.zeros((N, T), jnp.int32),  # [dst, slice bucket]
+        max_seq=jnp.full((num_flows,), -1, jnp.int32),
+        reorder=jnp.zeros((), jnp.int32),
+        occ=jnp.zeros((NQ,), jnp.int32),  # calendar-queue occupancy [N * 2T]
+    )
+
+
+def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
+    """Build the per-slice ``step(state, t) -> (state, stats)`` function over
+    the arrays in ``j`` (schedule + tables + workload).
+
+    Called at trace time; ``j`` may hold concrete device arrays *or tracers* —
+    :mod:`repro.core.reconfigure` passes freshly recompiled tables from its
+    epoch carry, which is what lets it hot-swap routing mid-run without
+    re-jitting. Everything derived here (per-slice capacities, the stacked
+    injection/transit lookup tables) is recomputed from ``j`` per trace.
+    """
     T, N, U = j["conn"].shape
     P = j["src"].shape[0]
     pid = jnp.arange(P, dtype=jnp.int32)
     NKEY = N * (N + 1)
     T2 = 2 * T                       # calendar-queue ring: dep in (t, t + 2T)
-    NQ = N * T2
     limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
     Tr = j["tf_next"].shape[0]
     # population tiers for the per-phase compact views (see module docstring)
@@ -350,19 +418,6 @@ def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
                                    constant_values=fill)
     stk_n = jnp.stack([padk(j["inj_next"], -1), padk(j["tf_next"], -1)])
     stk_d = jnp.stack([padk(j["inj_dep"], 0), padk(j["tf_dep"], 0)])
-
-    state = dict(
-        loc=jnp.full((P,), NOT_INJECTED, jnp.int32),
-        nxt=jnp.full((P,), -1, jnp.int32),
-        dep=jnp.zeros((P,), jnp.int32),
-        relook=jnp.zeros((P,), bool),
-        nhops=jnp.zeros((P,), jnp.int32),
-        t_del=jnp.full((P,), -1, jnp.int32),
-        block_until=jnp.zeros((N, T), jnp.int32),  # [dst, slice bucket]
-        max_seq=jnp.full((num_flows,), -1, jnp.int32),
-        reorder=jnp.zeros((), jnp.int32),
-        occ=jnp.zeros((NQ,), jnp.int32),  # calendar-queue occupancy [N * 2T]
-    )
 
     # per-packet constants bundled into the phase views
     CONSTS = dict(size=j["size"], dst=j["dst"], src=j["src"], flow=j["flow"],
@@ -691,7 +746,15 @@ def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
         )
         return s, stats
 
-    final, ys = jax.lax.scan(step, state, jnp.arange(num_slices, dtype=jnp.int32))
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
+                  num_flows: int):
+    step = _make_step(j, cfg, per_packet_mp, num_flows)
+    final, ys = jax.lax.scan(step, _init_state(j, num_flows),
+                             jnp.arange(num_slices, dtype=jnp.int32))
     return dict(
         t_deliver=final["t_del"], loc_final=final["loc"], nhops=final["nhops"],
         delivered_bytes=ys["delivered_bytes"], dropped=ys["dropped"],

@@ -1,0 +1,195 @@
+"""Traffic-aware reconfiguration as a single JAX program.
+
+The paper's headline claim is that decoupling optical software from hardware
+via time-flow tables lets architectures and routing be reconfigured *in
+software* at microsecond granularity. The TA case studies (§4.2, Fig. 4/5)
+run a loop: measure a traffic matrix, re-derive the schedule, recompile the
+routing tables, keep simulating. With the numpy compiler that loop
+round-trips through host Python between every epoch; this module closes it
+on-device.
+
+:func:`reconfigure` runs ``num_epochs`` reconfiguration epochs inside one
+jitted ``lax.scan``. Each epoch body, entirely on-device:
+
+1. **measures** the demand matrix from the live fabric state (bytes of every
+   packet not yet delivered, summed per (src, dst) pair);
+2. **re-derives the schedule**: the ``k_hot`` highest-demand pairs get
+   dedicated bidirectional circuit slices appended to the base rotor cycle
+   (the dense analogue of :func:`repro.core.topology.sorn`'s hotspot
+   skewing), chosen with ``lax.top_k`` so the schedule update is pure jnp;
+3. **recompiles the time-flow tables** with the device routing compiler
+   (:func:`repro.core.routing_jnp.compile_tables` — the same backward
+   time-expanded DP the host compiler runs, bit-identical);
+4. **hot-swaps** the new tables into the fabric: the epoch re-enters the
+   per-slice data-plane step built by :func:`repro.core.fabric._make_step`,
+   whose table inputs come from this epoch's recompile rather than a host
+   deploy.
+
+Because the extra hot slices have a static count, every epoch's schedule,
+tables, and state share one shape and the whole loop is a single XLA
+program — no host transfer between measurement, recompile, and simulation.
+With ``k_hot=0`` the schedule and tables are identical every epoch and the
+loop is bit-identical to a plain :func:`repro.core.fabric.simulate` run of
+the same length (enforced by ``tests/test_reconfigure.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import routing_jnp
+from .fabric import DROPPED, FabricConfig, Workload, _init_state, _make_step
+from .topology import Schedule
+
+__all__ = ["ReconfigConfig", "ReconfigResult", "reconfigure"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconfigConfig:
+    """Static parameters of the reconfiguration loop (hashable; closed over
+    by the jitted scan).
+
+    epoch_slices: fabric slices simulated per epoch between recompiles.
+    num_epochs: reconfiguration epochs; total run = num_epochs * epoch_slices.
+    scheme: TO routing scheme recompiled each epoch — one of
+        :data:`repro.core.routing_jnp.SCHEMES`.
+    k_hot: hot-pair circuit slices appended to the base cycle each epoch
+        (0 = never touch the schedule, only exercise the recompile loop).
+    max_hop / kpaths: forwarded to the routing compiler.
+    """
+
+    epoch_slices: int = 32
+    num_epochs: int = 8
+    scheme: str = "hoho"
+    k_hot: int = 4
+    max_hop: int = 4
+    kpaths: int = 4
+
+
+@dataclasses.dataclass
+class ReconfigResult:
+    """Per-packet outcomes plus per-slice stats (concatenated across epochs,
+    so ``delivered_bytes`` etc. align with a plain ``simulate`` run) and the
+    per-epoch reconfiguration trace."""
+
+    t_deliver: np.ndarray        # [P] slice of delivery (-1 undelivered)
+    loc_final: np.ndarray        # [P]
+    nhops: np.ndarray            # [P]
+    delivered_bytes: np.ndarray  # [S] per slice, S = num_epochs*epoch_slices
+    dropped: np.ndarray          # [S] cumulative dropped packets
+    buf_bytes: np.ndarray        # [S, N]
+    offl_bytes: np.ndarray       # [S, N]
+    blocked_inj: np.ndarray      # [S]
+    slice_miss: np.ndarray       # [S]
+    reorder_cnt: np.ndarray      # scalar
+    hot_src: np.ndarray          # [num_epochs, k_hot] chosen pairs (-1 none)
+    hot_dst: np.ndarray          # [num_epochs, k_hot]
+    demand_total: np.ndarray     # [num_epochs] pending bytes at epoch start
+
+
+def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
+                rcfg: ReconfigConfig) -> ReconfigResult:
+    """Run the traffic-aware reconfiguration loop (see module docstring).
+
+    ``sched`` is the *base* cycle ([T0, N, U]); each epoch simulates on an
+    extended cycle of ``T0 + rcfg.k_hot`` slices whose tail carries the
+    current hot-pair circuits. All TO schemes hash multipath per packet, and
+    the table lookup runs the plain-gather backend inside the epoch scan.
+    """
+    if rcfg.scheme not in routing_jnp.SCHEMES:
+        raise ValueError(f"unknown TO scheme {rcfg.scheme!r}: expected one "
+                         f"of {routing_jnp.SCHEMES}")
+    if cfg.lookup_impl != "jnp":
+        raise ValueError("reconfigure() supports lookup_impl='jnp' only "
+                         "(the Pallas lookup kernel is a per-deploy path)")
+    T0, N, U = sched.conn.shape
+    # epoch-0 placeholder hot slices (dark): fixes the extended cycle shape
+    conn0 = np.concatenate(
+        [sched.conn,
+         np.full((rcfg.k_hot, N, U), -1, dtype=np.int32)], axis=0)
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    j = dict(
+        conn=dev(conn0),
+        src=dev(wl.src), dst=dev(wl.dst), size=dev(wl.size),
+        t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
+        is_eleph=dev(wl.is_eleph, jnp.bool_),
+    )
+    num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
+    out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
+    return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
+                     num_flows: int):
+    Tf, N, U = j["conn"].shape               # Tf = T0 + k_hot
+    E = rcfg.epoch_slices
+    K = rcfg.k_hot
+    base_conn = j["conn"][:T0]
+    pair_key = j["src"] * N + j["dst"]
+    offdiag = (jnp.arange(N * N) // N) != (jnp.arange(N * N) % N)
+
+    def epoch(state, e):
+        t0 = e * E
+
+        # 1. measure: pending bytes per (src, dst) from the live state
+        rem = (state["t_del"] < 0) & (state["loc"] != DROPPED)
+        demand = jax.ops.segment_sum(
+            jnp.where(rem, j["size"], 0), pair_key, num_segments=N * N)
+
+        # 2. re-derive the schedule: top-K demand pairs get dedicated
+        # bidirectional circuits in the appended hot slices
+        if K > 0:
+            vals, idx = jax.lax.top_k(jnp.where(offdiag, demand, -1), K)
+            hs, hd = (idx // N).astype(jnp.int32), (idx % N).astype(jnp.int32)
+            ok = vals > 0
+            hot_src = jnp.where(ok, hs, -1)
+            hot_dst = jnp.where(ok, hd, -1)
+            srows = jnp.arange(K, dtype=jnp.int32)
+            extra = jnp.full((K, N, U), -1, jnp.int32)
+            extra = extra.at[srows, jnp.clip(hs, 0, N - 1), 0].set(
+                jnp.where(ok, hd, -1))
+            extra = extra.at[srows, jnp.clip(hd, 0, N - 1), 0].set(
+                jnp.where(ok, hs, -1))
+            conn_e = jnp.concatenate([base_conn, extra], axis=0)
+        else:
+            hot_src = jnp.full((K,), -1, jnp.int32)
+            hot_dst = jnp.full((K,), -1, jnp.int32)
+            conn_e = base_conn
+
+        # 3. recompile the time-flow tables on-device
+        tf_n, tf_d, inj_n, inj_d = routing_jnp.compile_tables(
+            conn_e, rcfg.scheme, max_hop=rcfg.max_hop, kpaths=rcfg.kpaths)
+
+        # 4. hot-swap into the fabric and run the epoch
+        jj = dict(j, conn=conn_e, tf_next=tf_n, tf_dep=tf_d,
+                  inj_next=inj_n, inj_dep=inj_d,
+                  first_direct=routing_jnp.first_direct_offsets(conn_e))
+        step = _make_step(jj, cfg, True, num_flows)
+        state, ys = jax.lax.scan(step, state,
+                                 t0 + jnp.arange(E, dtype=jnp.int32))
+        ys.update(hot_src=hot_src, hot_dst=hot_dst,
+                  demand_total=jnp.sum(jnp.where(rem, j["size"], 0)))
+        return state, ys
+
+    state0 = _init_state(j, num_flows)
+    final, ys = jax.lax.scan(epoch, state0,
+                             jnp.arange(rcfg.num_epochs, dtype=jnp.int32))
+    S = rcfg.num_epochs * E
+    flat = lambda a: a.reshape((S,) + a.shape[2:])
+    return dict(
+        t_deliver=final["t_del"], loc_final=final["loc"],
+        nhops=final["nhops"],
+        delivered_bytes=flat(ys["delivered_bytes"]),
+        dropped=flat(ys["dropped"]),
+        buf_bytes=flat(ys["buf_bytes"]), offl_bytes=flat(ys["offl_bytes"]),
+        blocked_inj=flat(ys["blocked_inj"]),
+        slice_miss=flat(ys["slice_miss"]),
+        reorder_cnt=final["reorder"],
+        hot_src=ys["hot_src"], hot_dst=ys["hot_dst"],
+        demand_total=ys["demand_total"],
+    )

@@ -34,8 +34,19 @@ The TO compilers never iterate per (slice, node, destination) in Python:
    cycle; ``opera`` runs a batched all-destination Bellman/BFS over ``conn``
    instead of per-slice networkx searches.
 
-Golden-equivalence tests against the original loop implementations live in
-``tests/test_routing_golden.py``.
+Host vs. device compilation (``compile_impl``)
+----------------------------------------------
+Every TO compiler takes ``compile_impl="numpy"`` (default; the reference
+implementation in this module) or ``"jnp"`` — the device-resident port in
+:mod:`repro.core.routing_jnp`, which runs the same DP + slot collection as a
+jittable jnp program and is enforced bit-identical by the golden tests. The
+``"jnp"`` knob here still returns host ``CompiledRouting`` arrays (it is the
+validation/benchmark path); :mod:`repro.core.reconfigure` uses the jnp
+compiler directly to recompile tables *inside* a jitted traffic-aware
+reconfiguration loop without leaving the device.
+
+Golden-equivalence tests against the original loop implementations (and
+between the numpy and jnp paths) live in ``tests/test_routing_golden.py``.
 """
 from __future__ import annotations
 
@@ -67,15 +78,28 @@ INF = np.int64(1 << 40)
 
 @dataclasses.dataclass
 class CompiledRouting:
-    """Dense time-flow tables.
+    """Dense time-flow tables — the common compile target of every routing
+    scheme (paper §3) and the exact format :func:`repro.core.fabric.simulate`
+    executes.
+
+    All four tables share the shape ``[T, N, D, k]``: schedule slice ``T``
+    (``T == 1`` for TA schemes, where the time match is wildcarded), node
+    ``N``, destination ``D == N``, multipath slot ``k``. Valid slots are
+    contiguous from slot 0; the fabric picks one by hashing the packet (or
+    flow) id over the valid count.
 
     tf_next[t, n, d, k]: egress peer for a packet at node n, arrival slice t,
-        destination d, multipath slot k (-1 = invalid slot).
+        destination d, multipath slot k (-1 = invalid slot; peer id ``N``
+        means the electrical egress of hybrid fabrics).
     tf_dep[t, n, d, k]: departure-slice *offset* (0 = leave in this slice,
         matching Fig. 3 where dep==arr; >0 = buffer in the calendar queue for
         that many slices).
-    inj_next / inj_dep: same, consulted only for the packet's first hop.
+    inj_next / inj_dep: same, consulted only for the packet's first hop
+        (the host/ToR split of the paper's testbed — e.g. VLB sprays at
+        injection and runs direct-circuit at transit).
     multipath: "packet" (hash per packet) or "flow" (hash per flow id).
+    lookup: "hop" (per-hop tables) or "source" (documented alias; see
+        :meth:`repro.core.net.OpenOpticsNet.deploy_routing`).
     weights: optional WCMP weights aligned with the k axis (else uniform).
     """
 
@@ -344,6 +368,26 @@ def _dp_tables(sched: Schedule, max_hop: int, kpaths: int):
 # TO routing algorithms
 # ---------------------------------------------------------------------------
 
+def _jnp_tables(sched: Schedule, scheme: str, max_hop: int = 4,
+                kpaths: int = 4):
+    """Compile ``scheme`` with the device compiler and pull the tables back to
+    host numpy (the ``compile_impl="jnp"`` path of the scheme functions)."""
+    import jax.numpy as jnp
+
+    from . import routing_jnp
+
+    tn, td, inn, ind = routing_jnp.compile_tables(
+        jnp.asarray(sched.conn), scheme, max_hop=max_hop, kpaths=kpaths)
+    return (np.asarray(tn), np.asarray(td), np.asarray(inn), np.asarray(ind))
+
+
+def _check_compile_impl(compile_impl: str) -> bool:
+    """Validate the knob; True when the jnp path was requested."""
+    if compile_impl not in ("numpy", "jnp"):
+        raise ValueError(f"unknown compile_impl {compile_impl!r}: expected "
+                         "'numpy' or 'jnp'")
+    return compile_impl == "jnp"
+
 def _has_circuit_grid(sched: Schedule) -> np.ndarray:
     """has[t, n, d]: a circuit n -> d is up in slice t."""
     T, N, U = sched.conn.shape
@@ -367,9 +411,21 @@ def first_direct_offsets(sched: Schedule) -> np.ndarray:
     return np.where(nxt[:T] >= NEVER, -1, off).astype(np.int32)
 
 
-def direct(sched: Schedule, **_) -> CompiledRouting:
+def direct(sched: Schedule, compile_impl: str = "numpy", **_) -> CompiledRouting:
     """Direct-circuit routing: hold every packet at its source until the
-    one-hop circuit to its destination appears (paper Fig. 3a)."""
+    one-hop circuit to its destination appears (paper Fig. 3a).
+
+    Args:
+        sched: the optical schedule to compile against.
+        compile_impl: "numpy" (host reference) or "jnp" (device compiler,
+            bit-identical; see :mod:`repro.core.routing_jnp`).
+
+    Returns single-slot (k = 1) tables ``[T, N, D, 1]``; injection and
+    transit tables are identical.
+    """
+    if _check_compile_impl(compile_impl):
+        tn, td, inn, ind = _jnp_tables(sched, "direct")
+        return CompiledRouting(tn, td, inn, ind)
     T, N, U = sched.conn.shape
     fd = first_direct_offsets(sched)                     # [T, N, N]
     found = fd >= 0
@@ -379,11 +435,25 @@ def direct(sched: Schedule, **_) -> CompiledRouting:
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
 
 
-def vlb(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
+def vlb(sched: Schedule, kpaths: int = 4, compile_impl: str = "numpy",
+        **_) -> CompiledRouting:
     """Valiant load balancing (RotorNet): injection sprays packets over the
     currently connected neighbours (packet-level multipath); transit nodes run
     direct-circuit routing, holding the packet for the rotor circuit to the
-    destination. Direct shortcut taken when the source already sees dst."""
+    destination. Direct shortcut taken when the source already sees dst.
+
+    Args:
+        sched: the optical schedule to compile against.
+        kpaths: spray width — injection slots per (slice, src, dst).
+        compile_impl: "numpy" (host reference) or "jnp" (device compiler,
+            bit-identical; see :mod:`repro.core.routing_jnp`).
+
+    Returns ``inj_*`` spray tables ``[T, N, D, kpaths]`` over k = 1 transit
+    direct-circuit tables, with per-packet multipath hashing.
+    """
+    if _check_compile_impl(compile_impl):
+        tn, td, inn, ind = _jnp_tables(sched, "vlb", kpaths=kpaths)
+        return CompiledRouting(tn, td, inn, ind, multipath="packet")
     base = direct(sched)
     T, N, U = sched.conn.shape
     diag = np.arange(N)
@@ -408,10 +478,24 @@ def vlb(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
                            multipath="packet")
 
 
-def opera(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
+def opera(sched: Schedule, max_hop: int = 4, compile_impl: str = "numpy",
+          **_) -> CompiledRouting:
     """Opera: within each slice the (expander) topology is treated as static
     and packets ride multi-hop shortest paths that complete in-slice
-    (departure offset 0 on every hop)."""
+    (departure offset 0 on every hop).
+
+    Args:
+        sched: the optical schedule to compile against.
+        max_hop: in-slice path-length bound for the batched BFS; pairs
+            farther apart fall back to waiting for a direct circuit.
+        compile_impl: "numpy" (host reference) or "jnp" (device compiler,
+            bit-identical; see :mod:`repro.core.routing_jnp`).
+
+    Returns single-slot (k = 1) tables ``[T, N, D, 1]``.
+    """
+    if _check_compile_impl(compile_impl):
+        tn, td, inn, ind = _jnp_tables(sched, "opera", max_hop=max_hop)
+        return CompiledRouting(tn, td, inn, ind)
     T, N, U = sched.conn.shape
     tf_next = np.full((T, N, N, 1), -1, dtype=np.int32)
     tf_dep = np.zeros((T, N, N, 1), dtype=np.int32)
@@ -443,17 +527,47 @@ def opera(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
 
 
-def ucmp(sched: Schedule, max_hop: int = 4, kpaths: int = 4, **_) -> CompiledRouting:
+def ucmp(sched: Schedule, max_hop: int = 4, kpaths: int = 4,
+         compile_impl: str = "numpy", **_) -> CompiledRouting:
     """UCMP: uniform-cost multi-path across time — all departure options whose
-    arrival slice equals the earliest achievable are load-balanced per packet."""
+    arrival slice equals the earliest achievable are load-balanced per packet.
+
+    Args:
+        sched: the optical schedule to compile against.
+        max_hop: sizes the DP's lexicographic metric base (hop counts stay
+            below it for any sane schedule; the fabric enforces its own max).
+        kpaths: equal-cost slots kept per (slice, node, dst).
+        compile_impl: "numpy" (host reference) or "jnp" (device compiler,
+            bit-identical; see :mod:`repro.core.routing_jnp`).
+
+    Returns ``[T, N, D, kpaths]`` tables with per-packet multipath hashing;
+    injection and transit tables are identical.
+    """
+    if _check_compile_impl(compile_impl):
+        tn, td, inn, ind = _jnp_tables(sched, "ucmp", max_hop=max_hop,
+                                       kpaths=kpaths)
+        return CompiledRouting(tn, td, inn, ind, multipath="packet")
     tf_next, tf_dep = _dp_tables(sched, max_hop, kpaths)
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
                            multipath="packet")
 
 
-def hoho(sched: Schedule, max_hop: int = 4, **_) -> CompiledRouting:
+def hoho(sched: Schedule, max_hop: int = 4, compile_impl: str = "numpy",
+         **_) -> CompiledRouting:
     """Hop-On Hop-Off: the single earliest-arrival (then fewest-hop) path —
-    slot 0 of the UCMP table."""
+    slot 0 of the UCMP table.
+
+    Args:
+        sched: the optical schedule to compile against.
+        max_hop: sizes the DP's lexicographic metric base.
+        compile_impl: "numpy" (host reference) or "jnp" (device compiler,
+            bit-identical; see :mod:`repro.core.routing_jnp`).
+
+    Returns single-slot (k = 1) tables ``[T, N, D, 1]``.
+    """
+    if _check_compile_impl(compile_impl):
+        tn, td, inn, ind = _jnp_tables(sched, "hoho", max_hop=max_hop)
+        return CompiledRouting(tn, td, inn, ind)
     tf_next, tf_dep = _dp_tables(sched, max_hop, kpaths=1)
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy())
 

@@ -1,0 +1,320 @@
+"""Device-resident routing compiler: the backward time-expanded DP and every
+TO scheme compiler (``direct``/``vlb``/``opera``/``ucmp``/``hoho``) as pure
+jnp programs, jittable and batchable on-device.
+
+This is the jnp port of the numpy reference compilers in
+:mod:`repro.core.routing` (ROADMAP: "a jnp port would let routing recompile
+on-device during TA reconfiguration loops"). The numpy path stays the
+reference implementation; every function here is enforced bit-identical to it
+by ``tests/test_routing_golden.py``. Users normally reach this module through
+``compile_impl="jnp"`` on the scheme compilers, or through
+:mod:`repro.core.reconfigure`, which recompiles tables *inside* a jitted
+traffic-aware reconfiguration loop.
+
+Why the port is not a transliteration
+-------------------------------------
+The numpy equal-cost slot collection (:func:`repro.core.routing._dp_tables`)
+enumerates "match events" sparsely with ``np.nonzero`` — a data-dependent
+shape, so not jittable. The jnp formulation inverts the problem: instead of
+scattering events into slots, every output cell ``(t, n, d, s)`` *gathers* its
+event directly.
+
+Because waiting is free, ``cost[:, n, d]`` is non-decreasing along the time
+axis and a start slice ``t``'s wait-chain is exactly the run of equal cost
+values containing ``t``. Therefore the slot-``s`` action for start ``t`` is
+the ``s``-th match event at-or-after ``t`` in (slice, uplink) order — i.e. the
+event with column-global index ``g = C[t] + s``, where ``C`` is the exclusive
+per-slice event-count cumsum. Its slice is found with one batched
+``searchsorted`` over ``C`` and it is valid iff it exists (``g < total``) and
+lies in ``t``'s run (``cost[tt] == cost[t]``). Everything is dense, static
+shaped, and O(T * N^2 * kpaths * log T) — no host round-trip.
+
+Numeric range
+-------------
+The numpy reference computes the lexicographic (arrival-slice, hops) metric in
+int64; on-device we use int32 (x64 is disabled by default in JAX). Both paths
+derive tables only from *equalities between finite costs*, which are identical
+integers in either width, so bit-identity holds as long as finite costs stay
+below the int32 sentinel — guaranteed by a static shape check
+(``H * B < 2**29`` with ``H = 2T``; holds for any schedule up to ~500 nodes of
+round-robin, far past the paper's 108-ToR testbed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "JINF",
+    "time_dp_all",
+    "dp_tables",
+    "first_direct_offsets",
+    "direct_tables",
+    "vlb_tables",
+    "opera_tables",
+    "compile_tables",
+    "SCHEMES",
+]
+
+# int32 unreachable sentinel (numpy reference uses 1 << 40 in int64; only
+# equalities between finite costs matter for the compiled tables).
+JINF = jnp.int32(1 << 30)
+
+SCHEMES = ("direct", "vlb", "opera", "ucmp", "hoho")
+
+
+def _dp_B(T: int, max_hop: int) -> int:
+    H = 2 * T
+    return (max_hop + H) * (H + 2) + 1
+
+
+def _check_range(T: int, max_hop: int) -> None:
+    H = 2 * T
+    B = _dp_B(T, max_hop)
+    if H * B + H + 2 >= (1 << 29):
+        raise ValueError(
+            f"schedule too large for the int32 device DP: T={T}, "
+            f"max_hop={max_hop} needs cost range {H * B + H + 2} >= 2^29; "
+            "use the numpy compiler (compile_impl='numpy')")
+
+
+def time_dp_all(conn: jnp.ndarray, max_hop: int = 4) -> jnp.ndarray:
+    """Backward DP over the time-expanded graph, batched over all
+    destinations: ``cost[t, n, d]``, jnp port of
+    :func:`repro.core.routing._time_dp_all` (same recurrence, int32).
+
+    One ``lax.scan`` step per time slice, one gather + minimum per uplink —
+    identical device-side structure to the fabric's per-slice scan.
+    """
+    T, N, U = conn.shape
+    _check_range(T, max_hop)
+    H = 2 * T
+    B = _dp_B(T, max_hop)
+    diag = jnp.arange(N, dtype=jnp.int32)
+    cost_H = jnp.full((N, N), JINF, jnp.int32).at[diag, diag].set(
+        jnp.int32(H * B))
+
+    def step(cost_next, t):
+        c = cost_next
+        conn_t = conn[t % T]                      # [N, U]
+        for k in range(U):
+            peer = conn_t[:, k]
+            ok = peer >= 0
+            pc = cost_next[jnp.clip(peer, 0, N - 1)]          # [N, D]
+            pc = jnp.where(peer[:, None] == diag[None, :], t * B, pc)
+            cand = jnp.where(ok[:, None], pc + 1, JINF)
+            c = jnp.minimum(c, cand)
+        c = c.at[diag, diag].set(t * B)
+        return c, c
+
+    ts = jnp.arange(H - 1, -1, -1, dtype=jnp.int32)
+    _, rows = jax.lax.scan(step, cost_H, ts)      # rows: t = H-1 .. 0
+    return jnp.concatenate([jnp.flip(rows, axis=0), cost_H[None]], axis=0)
+
+
+def dp_tables(conn: jnp.ndarray, max_hop: int = 4, kpaths: int = 4):
+    """Earliest-arrival per-hop time-flow tables ``(tf_next, tf_dep)`` of
+    shape ``[T, N, D, kpaths]`` for every destination — the device analogue of
+    :func:`repro.core.routing._dp_tables` (UCMP for ``kpaths > 1``, HOHO slot
+    0 alone).
+
+    Gather formulation (see module docstring): the slot-``s`` action of start
+    slice ``t`` is the event with column-global index ``C[t] + s``, located
+    with a batched ``searchsorted`` and validated against ``t``'s cost run.
+    """
+    T, N, U = conn.shape
+    _check_range(T, max_hop)
+    H = 2 * T
+    B = _dp_B(T, max_hop)
+    cost = time_dp_all(conn, max_hop)             # [H+1, N, D]
+    costH = cost[:H]
+    diag = jnp.arange(N, dtype=jnp.int32)
+    tts = jnp.arange(H, dtype=jnp.int32)
+    peer = conn[tts % T]                          # [H, N, U]
+    ok = peer >= 0
+
+    # same peer on an earlier uplink: counted once, earlier uplink wins
+    dup_cols = [jnp.zeros((H, N), bool)]
+    for u in range(1, U):
+        d_u = jnp.zeros((H, N), bool)
+        for u2 in range(u):
+            d_u = d_u | (peer[:, :, u2] == peer[:, :, u])
+        dup_cols.append(d_u & ok[:, :, u])
+    dup = jnp.stack(dup_cols, axis=2)             # [H, N, U]
+
+    # match[tt, n, u, d]: hopping n -> peer(tt, u) attains cost[tt, n, d]
+    match_cols = []
+    for u in range(U):
+        p_u = peer[:, :, u]
+        pc = jnp.clip(p_u, 0, N - 1)
+        val = cost[1:][tts[:, None], pc]          # cost[tt+1, peer, d]
+        val = jnp.where(p_u[..., None] == diag[None, None, :],
+                        (tts * B)[:, None, None], val)
+        match_cols.append(
+            (ok[:, :, u] & ~dup[:, :, u])[..., None] & (val + 1 == costH))
+    match = jnp.stack(match_cols, axis=2)         # [H, N, U, D] bool
+
+    evcount = match.sum(axis=2, dtype=jnp.int32)  # [H, N, D]
+    C = jnp.concatenate([jnp.zeros((1, N, N), jnp.int32),
+                         jnp.cumsum(evcount, axis=0, dtype=jnp.int32)])
+    total = C[H]                                  # [N, D]
+
+    S = kpaths
+    g = C[:T][:, :, :, None] + jnp.arange(S, dtype=jnp.int32)  # [T, N, D, S]
+
+    # slice holding the g-th event: #slices tt with C[tt+1] <= g
+    Ccols = C[1:].transpose(1, 2, 0).reshape(N * N, H)
+    gcols = g.transpose(1, 2, 0, 3).reshape(N * N, T * S)
+    tt_g = jax.vmap(
+        lambda c, q: jnp.searchsorted(c, q, side="right"))(Ccols, gcols)
+    tt_g = tt_g.reshape(N, N, T, S).transpose(2, 0, 1, 3)
+    tt_c = jnp.clip(tt_g, 0, H - 1).astype(jnp.int32)          # [T, N, D, S]
+
+    nn = diag[None, :, None, None]
+    dd = diag[None, None, :, None]
+    cost_t = costH[:T][:, :, :, None]
+    cost_tt = costH[tt_c, nn, dd]
+    valid = (g < total[None, :, :, None]) & (cost_tt == cost_t) \
+        & (cost_t < JINF)
+    r_w = g - C[tt_c, nn, dd]                     # within-slice event rank
+
+    urank = jnp.cumsum(match, axis=2, dtype=jnp.int32) \
+        - match.astype(jnp.int32)                 # exclusive per-uplink rank
+    tf_next = jnp.full((T, N, N, S), -1, jnp.int32)
+    for u in range(U):
+        m_g = match[:, :, u, :][tt_c, nn, dd]
+        r_g = urank[:, :, u, :][tt_c, nn, dd]
+        p_g = peer[:, :, u][tt_c, nn]
+        hit = valid & m_g & (r_g == r_w)
+        tf_next = jnp.where(hit, p_g, tf_next)
+    t_col = jnp.arange(T, dtype=jnp.int32)[:, None, None, None]
+    tf_dep = jnp.where(valid, tt_c - t_col, 0).astype(jnp.int32)
+    return tf_next, tf_dep
+
+
+def _has_circuit_grid(conn: jnp.ndarray) -> jnp.ndarray:
+    """has[t, n, d]: a circuit n -> d is up in slice t (dense scatter-max)."""
+    T, N, U = conn.shape
+    has = jnp.zeros((T, N, N), jnp.int32)
+    tgrid = jnp.arange(T, dtype=jnp.int32)[:, None]
+    ngrid = jnp.arange(N, dtype=jnp.int32)[None, :]
+    for u in range(U):
+        p = conn[:, :, u]
+        has = has.at[tgrid, ngrid, jnp.clip(p, 0, N - 1)].max(
+            (p >= 0).astype(jnp.int32))
+    return has.astype(bool)
+
+
+def first_direct_offsets(conn: jnp.ndarray) -> jnp.ndarray:
+    """first[t, n, d]: slices to wait at node n (from slice t) until the next
+    direct circuit n -> d; -1 if the schedule never provides one. jnp port of
+    :func:`repro.core.routing.first_direct_offsets` (suffix-min over a doubled
+    cycle via ``lax.cummin``)."""
+    T, N, U = conn.shape
+    NEVER = jnp.int32(1 << 30)
+    has2 = jnp.concatenate([_has_circuit_grid(conn)] * 2, axis=0)  # [2T, N, N]
+    idx = jnp.arange(2 * T, dtype=jnp.int32)[:, None, None]
+    nxt = jnp.where(has2, idx, NEVER)
+    nxt = jnp.flip(jax.lax.cummin(jnp.flip(nxt, axis=0), axis=0), axis=0)
+    off = nxt[:T] - jnp.arange(T, dtype=jnp.int32)[:, None, None]
+    return jnp.where(nxt[:T] >= NEVER, -1, off).astype(jnp.int32)
+
+
+def direct_tables(conn: jnp.ndarray):
+    """Direct-circuit ``(tf_next, tf_dep)`` with k = 1 (jnp port of
+    :func:`repro.core.routing.direct`)."""
+    T, N, U = conn.shape
+    fd = first_direct_offsets(conn)
+    found = fd >= 0
+    tf_next = jnp.where(found, jnp.arange(N, dtype=jnp.int32)[None, None, :],
+                        jnp.int32(-1))[..., None]
+    tf_dep = jnp.where(found, fd, 0).astype(jnp.int32)[..., None]
+    return tf_next, tf_dep
+
+
+def vlb_tables(conn: jnp.ndarray, kpaths: int = 4):
+    """VLB ``(tf_next, tf_dep, inj_next, inj_dep)``: spray at injection over
+    the currently connected neighbours, direct-circuit at transit (jnp port of
+    :func:`repro.core.routing.vlb`)."""
+    T, N, U = conn.shape
+    diag = jnp.arange(N, dtype=jnp.int32)
+    tf_next, tf_dep = direct_tables(conn)
+    is_peer = _has_circuit_grid(conn)             # [T, N, D]
+    nd_ok = diag[:, None] != diag[None, :]
+    peer = conn
+    ok = peer >= 0
+    validu = ok[:, :, :, None] & (peer[:, :, :, None] != diag) \
+        & nd_ok[None, :, None, :]
+    rank = jnp.cumsum(validu, axis=2, dtype=jnp.int32) \
+        - validu.astype(jnp.int32)
+    sel = validu & (rank < kpaths) & ~is_peer[:, :, None, :]
+    slots = []
+    for s in range(kpaths):
+        acc = jnp.full((T, N, N), -1, jnp.int32)
+        for u in range(U):
+            hit = sel[:, :, u, :] & (rank[:, :, u, :] == s)
+            acc = jnp.where(hit, peer[:, :, u][:, :, None], acc)
+        slots.append(acc)
+    inj_next = jnp.stack(slots, axis=-1)          # [T, N, D, kpaths]
+    short = is_peer & nd_ok[None]
+    inj_next = inj_next.at[:, :, :, 0].set(
+        jnp.where(short, diag[None, None, :], inj_next[:, :, :, 0]))
+    inj_dep = jnp.zeros((T, N, N, kpaths), jnp.int32)
+    return tf_next, tf_dep, inj_next, inj_dep
+
+
+def opera_tables(conn: jnp.ndarray, max_hop: int = 4):
+    """Opera ``(tf_next, tf_dep)``: in-slice multi-hop shortest paths with a
+    direct-circuit fallback (jnp port of :func:`repro.core.routing.opera`,
+    vmapped over slices)."""
+    T, N, U = conn.shape
+    diag = jnp.arange(N, dtype=jnp.int32)
+    BIG = jnp.int32(1 << 20)
+
+    def per_slice(conn_t):
+        peer = conn_t                             # [N, U]
+        ok = peer >= 0
+        pclip = jnp.clip(peer, 0, N - 1)
+        dist = jnp.full((N, N), BIG, jnp.int32).at[diag, diag].set(0)
+        for _ in range(max_hop):
+            nd = jnp.where(ok[:, :, None], dist[pclip], BIG)
+            dist = jnp.minimum(dist, 1 + nd.min(axis=1))
+        nd = jnp.where(ok[:, :, None], dist[pclip], BIG)
+        good = nd == dist[:, None, :] - 1
+        usable = (dist > 0) & (dist <= max_hop) & good.any(axis=1)
+        first_u = jnp.argmax(good, axis=1)        # [N, D]
+        return jnp.where(usable, peer[diag[:, None], first_u],
+                         jnp.int32(-1))
+
+    nxt = jax.vmap(per_slice)(conn)               # [T, N, N]
+    fb_next, fb_dep = direct_tables(conn)
+    missing = nxt < 0
+    tf_next = jnp.where(missing, fb_next[..., 0], nxt)[..., None]
+    tf_dep = jnp.where(missing, fb_dep[..., 0], 0)[..., None].astype(jnp.int32)
+    return tf_next, tf_dep
+
+
+def compile_tables(conn: jnp.ndarray, scheme: str, max_hop: int = 4,
+                   kpaths: int = 4):
+    """One-stop jittable compile: ``(tf_next, tf_dep, inj_next, inj_dep)``
+    for any TO ``scheme`` in :data:`SCHEMES`. ``scheme`` must be static under
+    ``jit`` (close over it or mark it a static argument).
+
+    This is the entry point :mod:`repro.core.reconfigure` re-invokes every
+    reconfiguration epoch with a traffic-reweighted ``conn``.
+    """
+    if scheme == "ucmp":
+        n, d = dp_tables(conn, max_hop, kpaths)
+        return n, d, n, d
+    if scheme == "hoho":
+        n, d = dp_tables(conn, max_hop, kpaths=1)
+        return n, d, n, d
+    if scheme == "direct":
+        n, d = direct_tables(conn)
+        return n, d, n, d
+    if scheme == "opera":
+        n, d = opera_tables(conn, max_hop)
+        return n, d, n, d
+    if scheme == "vlb":
+        return vlb_tables(conn, kpaths)
+    raise ValueError(f"unknown TO scheme {scheme!r}: expected one of {SCHEMES}")

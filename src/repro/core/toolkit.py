@@ -20,7 +20,20 @@ def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
                  dst: int, t0: int = 0, hashv: int = 0,
                  max_steps: int = 64) -> str:
     """Narrated per-hop walk: at each node, look up the time-flow table entry
-    (arrival slice, dst) and follow its (egress, departure slice) action."""
+    (arrival slice, dst) and follow its (egress, departure slice) action.
+
+    Args:
+        sched: the deployed optical schedule (used to check circuit liveness).
+        routing: compiled tables; the walk starts on ``inj_*`` and switches
+            to ``tf_*`` after the first hop, like the fabric.
+        src / dst / t0: the packet's source, destination, injection slice.
+        hashv: multipath selector — slot ``hashv % nvalid`` is followed.
+        max_steps: truncation bound for tables that loop.
+
+    The narration covers delivery, missing entries (stuck), dark circuits,
+    calendar-queue buffering, and the electrical egress (peer id == N: always
+    live, delivers with one-slice transit delay — fabric §5 semantics).
+    """
     T = routing.num_slices
     lines = [f"packet {src} -> {dst}, injected at slice {t0}"]
     node, t, tbl_next, tbl_dep = src, t0, routing.inj_next, routing.inj_dep
@@ -51,7 +64,12 @@ def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
                      f"{fabric} ({'live' if live else 'DARK — would drop'})")
         if not live:
             return "\n".join(lines)
-        node, t = nxt, wire_t
+        if nxt >= sched.num_nodes:
+            # electrical fabric (hybrid/Clos): always live, delivers to the
+            # destination with one-slice transit delay (fabric §5 semantics)
+            node, t = dst, wire_t + 1
+        else:
+            node, t = nxt, wire_t
         tbl_next, tbl_dep = routing.tf_next, routing.tf_dep
     lines.append("  ... trace truncated (max_steps)")
     return "\n".join(lines)

@@ -1,0 +1,52 @@
+"""Docs cannot silently rot: the quickstart's fenced python snippets must
+run, and every relative link in docs/ + README.md must resolve.
+
+Reuses the checker that the CI docs job runs (``scripts/check_docs.py``),
+loaded by file path so the scripts/ directory needs no packaging.
+"""
+import importlib.util
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "scripts" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_tree_exists():
+    for rel in ["docs/index.md", "docs/quickstart.md", "docs/architecture.md",
+                "docs/routing_schemes.md", "docs/api/core.topology.md",
+                "docs/api/core.routing.md", "docs/api/core.fabric.md",
+                "docs/api/core.reconfigure.md", "docs/api/core.toolkit.md",
+                "README.md"]:
+        assert (REPO / rel).is_file(), f"missing {rel}"
+
+
+def test_no_broken_links():
+    assert _checker().check_links() == []
+
+
+def test_every_scheme_has_a_trace_walkthrough():
+    text = (REPO / "docs" / "routing_schemes.md").read_text()
+    for scheme in ["direct", "vlb", "opera", "ucmp", "hoho", "ecmp", "wcmp",
+                   "ksp"]:
+        assert f"## {scheme}" in text, f"no section for {scheme}"
+    # captured trace_packet output, not just prose
+    assert text.count("DELIVERED at node") >= 8
+
+
+def test_quickstart_snippets_run():
+    """Execute the quickstart snippets cumulatively, as a reader would."""
+    mod = _checker()
+    snippets = mod.quickstart_snippets()
+    assert len(snippets) >= 4
+    ns = {}
+    for i, snip in enumerate(snippets):
+        exec(compile(snip, f"docs/quickstart.md[{i + 1}]", "exec"), ns)
+    # the narrative assertions inside the snippets did the real checking
+    assert "res" in ns and "trace" in ns

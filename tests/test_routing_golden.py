@@ -3,6 +3,10 @@ the original loop implementations (kept here as ``_ref_*``) bit-for-bit on
 random small schedules. ``_ref_opera`` carries a one-line fix (wrapping the
 networkx generator in ``dict``) — the seed version crashed on networkx >= 3.
 
+The device compiler (``repro.core.routing_jnp``, reached through
+``compile_impl="jnp"``) is held to the same standard: bit-identical tables
+against the numpy reference for every TO scheme, on every fixture schedule.
+
 No hypothesis dependency: plain seeded ``numpy.random`` sweeps.
 """
 import numpy as np
@@ -10,6 +14,7 @@ import networkx as nx
 import pytest
 
 from repro.core import direct, hoho, opera, round_robin, ucmp, vlb
+from repro.core import routing_jnp
 from repro.core.routing import (INF, CompiledRouting, _dp_B, _time_dp,
                                 _time_dp_all, first_direct_offsets)
 from repro.core.topology import Schedule
@@ -229,3 +234,70 @@ def test_vlb_golden(i):
 def test_opera_golden(i):
     sched = _schedules()[i]
     _assert_routing_equal(opera(sched), _ref_opera(sched))
+
+
+# ---------------------------------------------------------------------------
+# Device compiler (compile_impl="jnp") vs. numpy reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_time_dp_all_jnp_matches_numpy(i):
+    """Finite DP costs agree exactly; unreachable cells carry each
+    implementation's own sentinel (int64 INF vs int32 JINF)."""
+    import jax.numpy as jnp
+
+    sched = _schedules()[i]
+    cost_np, _ = _time_dp_all(sched, max_hop=4)
+    cost_j = np.asarray(routing_jnp.time_dp_all(jnp.asarray(sched.conn), 4))
+    finite = cost_np < INF
+    np.testing.assert_array_equal(cost_np[finite],
+                                  cost_j[finite].astype(np.int64))
+    assert np.all(cost_j[~finite] == int(routing_jnp.JINF))
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+def test_first_direct_offsets_jnp_golden(i):
+    import jax.numpy as jnp
+
+    sched = _schedules()[i]
+    np.testing.assert_array_equal(
+        first_direct_offsets(sched),
+        np.asarray(routing_jnp.first_direct_offsets(jnp.asarray(sched.conn))))
+
+
+@pytest.mark.parametrize("i", range(len(_schedules())))
+@pytest.mark.parametrize("alg,kw", [
+    (direct, {}),
+    (vlb, {}),
+    (opera, {}),
+    (hoho, {}),
+    (ucmp, {}),
+    (ucmp, {"kpaths": 2}),
+    (ucmp, {"kpaths": 1}),
+])
+def test_compile_impl_jnp_golden(i, alg, kw):
+    """compile_impl="jnp" must be bit-identical to the numpy reference for
+    every TO scheme."""
+    sched = _schedules()[i]
+    _assert_routing_equal(alg(sched, **kw),
+                          alg(sched, compile_impl="jnp", **kw))
+
+
+def test_compile_impl_rejects_unknown():
+    sched = round_robin(6, 1)
+    with pytest.raises(ValueError, match="compile_impl"):
+        ucmp(sched, compile_impl="pallas")
+    import jax.numpy as jnp
+    with pytest.raises(ValueError, match="scheme"):
+        routing_jnp.compile_tables(jnp.asarray(sched.conn), "ecmp")
+
+
+def test_jnp_dp_range_guard():
+    """The int32 device DP refuses schedules whose metric range would
+    overflow (the numpy int64 path remains available)."""
+    import jax.numpy as jnp
+
+    conn = jnp.zeros((600, 4, 1), jnp.int32)
+    with pytest.raises(ValueError, match="int32"):
+        routing_jnp.time_dp_all(conn, max_hop=4)

@@ -1,0 +1,118 @@
+"""Tests for the educational toolkit (:mod:`repro.core.toolkit`): every
+narrative branch of ``trace_packet`` (delivered, stuck, dark circuit,
+electrical egress, calendar-queue buffering, truncation) and
+``format_schedule``."""
+import numpy as np
+
+from repro.core import (CompiledRouting, clos_routing, hoho, round_robin,
+                        toolkit, vlb)
+from repro.core.routing import add_entry
+from repro.core.topology import Schedule
+
+
+def _empty_routing(T, N, k=1):
+    nxt = np.full((T, N, N, k), -1, dtype=np.int32)
+    dep = np.zeros((T, N, N, k), dtype=np.int32)
+    return CompiledRouting(nxt, dep, nxt.copy(), dep.copy())
+
+
+def test_trace_delivered():
+    sched = round_robin(8, 1)
+    out = toolkit.trace_packet(sched, hoho(sched), src=0, dst=5, t0=0)
+    assert "packet 0 -> 5" in out
+    assert "DELIVERED at node 5" in out
+    assert "live" in out
+
+
+def test_trace_stuck_no_entry():
+    sched = round_robin(8, 1)
+    out = toolkit.trace_packet(sched, _empty_routing(sched.num_slices, 8),
+                               src=0, dst=5, t0=0)
+    assert "NO ENTRY" in out and "stuck" in out
+    assert "DELIVERED" not in out
+
+
+def test_trace_dark_circuit():
+    """An entry pointing over a circuit the schedule never provides must be
+    narrated as DARK and stop the trace."""
+    sched = Schedule(np.full((2, 4, 1), -1, dtype=np.int32))
+    r = _empty_routing(2, 4)
+    add_entry(r, node=0, dst=3, egress=3, injection=True)
+    out = toolkit.trace_packet(sched, r, src=0, dst=3, t0=0)
+    assert "DARK" in out
+    assert "DELIVERED" not in out
+
+
+def test_trace_electrical_egress():
+    """The Clos baseline sends everything to the electrical egress (peer id
+    == N), which is always live and delivers next slice."""
+    sched = Schedule(np.full((1, 4, 1), -1, dtype=np.int32))
+    out = toolkit.trace_packet(sched, clos_routing(4), src=0, dst=2, t0=0)
+    assert "electrical egress" in out
+
+
+def test_trace_buffered_mentions_calendar_queue():
+    """direct/hoho hold packets in calendar queues; a hop with dep offset > 0
+    must narrate the buffering."""
+    sched = round_robin(8, 1)
+    r = hoho(sched)
+    texts = [toolkit.trace_packet(sched, r, src=0, dst=d, t0=0)
+             for d in range(1, 8)]
+    assert any("calendar queue" in t for t in texts)
+
+
+def test_trace_truncated():
+    """A self-loop table never reaches dst: the trace must hit max_steps."""
+    sched = round_robin(4, 1)
+    T, N = sched.num_slices, 4
+    nxt = np.full((T, N, N, 1), -1, dtype=np.int32)
+    dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    nxt[:, 0, 3, 0] = 1
+    nxt[:, 1, 3, 0] = 0  # 0 <-> 1 forever
+    r = CompiledRouting(nxt, dep, nxt.copy(), dep.copy())
+    # make the 0<->1 circuits live so the walk keeps going
+    conn = np.zeros((1, N, 2), dtype=np.int32)
+    conn[0, 0, 0], conn[0, 1, 0] = 1, 0
+    conn[0, :, 1] = -1
+    conn[0, 2, 0], conn[0, 3, 0] = 3, 2
+    out = toolkit.trace_packet(Schedule(conn), r, src=0, dst=3, t0=0,
+                               max_steps=6)
+    assert "truncated" in out
+
+
+def test_trace_multipath_slot_hash():
+    """hashv selects among the valid multipath slots."""
+    sched = round_robin(8, 1)
+    r = vlb(sched)
+    t0, src, dst = 0, 0, 5
+    nvalid = int((r.inj_next[0, src, dst] >= 0).sum())
+    assert nvalid >= 1
+    outs = {toolkit.trace_packet(sched, r, src, dst, t0, hashv=h)
+            for h in range(nvalid)}
+    assert len(outs) >= 1  # distinct slots may reach distinct first hops
+    for t in outs:
+        assert "DELIVERED" in t
+
+
+def test_format_schedule():
+    sched = round_robin(8, 1, slice_us=10.0)
+    out = toolkit.format_schedule(sched, max_slices=3)
+    assert "8 nodes x 1 uplinks" in out
+    assert "cycle 7 slices" in out
+    assert "slice 0: 0->1" in out
+    assert "(4 more slices)" in out
+
+
+def test_format_schedule_no_truncation():
+    sched = round_robin(4, 1)
+    out = toolkit.format_schedule(sched, max_slices=8)
+    assert "more slices" not in out
+
+
+def test_module_docstring_example_runs():
+    """The module docstring's example must stay executable (the docs build
+    runs it too)."""
+    from repro.core import round_robin as rr, hoho as hh
+    sched = rr(8, 1)
+    out = toolkit.trace_packet(sched, hh(sched), src=0, dst=5, t0=0)
+    assert isinstance(out, str) and out
