@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.core import (FabricConfig, FabricTables, ReconfigConfig, direct,
                         reconfigure, round_robin, synthesize, ucmp)
-from repro.core import routing_jnp
+from repro.core import routing_jnp, topology_jnp
 from repro.core.fabric import simulate
 from .common import timed
 
@@ -111,6 +111,30 @@ def run(quick: bool = False):
     S_r = rcfg.num_epochs * rcfg.epoch_slices
     rows.append((f"route_recompile_loop_{n_route}", dt / S_r * 1e6,
                  f"{S_r/dt:.1f}slice/s+{rcfg.num_epochs/dt:.1f}recompile/s"))
+
+    # on-device TA schedulers at paper scale: the greedy max-weight matching
+    # (edmonds analogue) and the BvN decomposition (Sinkhorn + greedy
+    # peeling) that reconfigure() can run inside its jitted epoch scan
+    tm = jnp.asarray(rng.random((n_route, n_route)) * 100, jnp.float32)
+    f_ed = jax.jit(topology_jnp.edmonds_conn)
+    us = _bench(f_ed, tm, iters=3)
+    rows.append((f"ta_match_edmonds_{n_route}", us, f"{n_route}-node matching"))
+    f_bvn = jax.jit(lambda m: topology_jnp.bvn_conn(m, num_slices=8,
+                                                    max_perms=8))
+    us = _bench(f_bvn, tm, iters=3)
+    rows.append((f"ta_match_bvn_{n_route}", us, "8-perm decomposition"))
+
+    # the full demand-aware loop: measure -> BvN -> recompile -> simulate,
+    # one XLA program per run (the Mordia scenario of the paper's §4.2)
+    rcfg_b = ReconfigConfig(epoch_slices=16, num_epochs=2, scheme="direct",
+                            scheduler="bvn", bvn_slices=8, bvn_perms=8)
+    reconfigure(sched_r, wl_r, cfg_r, rcfg_b)  # warm compile
+    t0 = time.time()
+    reconfigure(sched_r, wl_r, cfg_r, rcfg_b)
+    dt = time.time() - t0
+    S_b = rcfg_b.num_epochs * rcfg_b.epoch_slices
+    rows.append((f"reconfig_bvn_loop_{n_route}", dt / S_b * 1e6,
+                 f"{S_b/dt:.1f}slice/s+{rcfg_b.num_epochs/dt:.1f}bvn-recompile/s"))
 
     # fabric simulator throughput
     n2 = 16

@@ -13,10 +13,18 @@ jitted ``lax.scan``. Each epoch body, entirely on-device:
 
 1. **measures** the demand matrix from the live fabric state (bytes of every
    packet not yet delivered, summed per (src, dst) pair);
-2. **re-derives the schedule**: the ``k_hot`` highest-demand pairs get
-   dedicated bidirectional circuit slices appended to the base rotor cycle
-   (the dense analogue of :func:`repro.core.topology.sorn`'s hotspot
-   skewing), chosen with ``lax.top_k`` so the schedule update is pure jnp;
+2. **re-derives the schedule** with the configured ``scheduler``:
+
+   * ``"hot_slices"`` — the ``k_hot`` highest-demand pairs get dedicated
+     bidirectional circuit slices appended to the base rotor cycle (the
+     dense analogue of :func:`repro.core.topology.sorn`'s hotspot skewing),
+     chosen with ``lax.top_k``;
+   * ``"edmonds"`` — the epoch holds one max-weight-matching topology
+     derived from the demand matrix (c-Through;
+     :func:`repro.core.topology_jnp.edmonds_conn`);
+   * ``"bvn"`` — the epoch cycles a Birkhoff–von-Neumann decomposition of
+     the demand matrix (Mordia; :func:`repro.core.topology_jnp.bvn_conn`);
+
 3. **recompiles the time-flow tables** with the device routing compiler
    (:func:`repro.core.routing_jnp.compile_tables` — the same backward
    time-expanded DP the host compiler runs, bit-identical);
@@ -25,12 +33,16 @@ jitted ``lax.scan``. Each epoch body, entirely on-device:
    whose table inputs come from this epoch's recompile rather than a host
    deploy.
 
-Because the extra hot slices have a static count, every epoch's schedule,
-tables, and state share one shape and the whole loop is a single XLA
-program — no host transfer between measurement, recompile, and simulation.
-With ``k_hot=0`` the schedule and tables are identical every epoch and the
-loop is bit-identical to a plain :func:`repro.core.fabric.simulate` run of
-the same length (enforced by ``tests/test_reconfigure.py``).
+Because every scheduler emits a statically-shaped schedule (hot slices have
+a static count; the matching holds one topology; the BvN cycle has a static
+slice count), every epoch's schedule, tables, and state share one shape and
+the whole loop is a single XLA program — no host transfer between
+measurement, match, recompile, and simulation. With
+``scheduler="hot_slices"`` and ``k_hot=0`` the schedule and tables are
+identical every epoch and the loop is bit-identical to a plain
+:func:`repro.core.fabric.simulate` run of the same length (enforced by
+``tests/test_reconfigure.py``, which also replays every scheduler's recorded
+``epoch_conn`` through host-compiled tables for bit parity).
 """
 from __future__ import annotations
 
@@ -41,7 +53,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import routing_jnp
+from . import routing_jnp, topology_jnp
 from .fabric import DROPPED, FabricConfig, Workload, _init_state, _make_step
 from .topology import Schedule
 
@@ -57,15 +69,31 @@ class ReconfigConfig:
     num_epochs: reconfiguration epochs; total run = num_epochs * epoch_slices.
     scheme: TO routing scheme recompiled each epoch — one of
         :data:`repro.core.routing_jnp.SCHEMES`.
+    scheduler: how each epoch re-derives its schedule from measured demand —
+        one of :data:`repro.core.topology_jnp.SCHEDULERS`:
+        "hot_slices" (k_hot top-demand pairs get extra slices on the base
+        cycle), "edmonds" (one greedy max-weight-matching topology,
+        c-Through-style), "bvn" (a Birkhoff–von-Neumann cycle of
+        ``bvn_slices`` slices over ``bvn_perms`` decomposed permutations,
+        Mordia-style). "edmonds"/"bvn" ignore the base cycle entirely — the
+        schedule is pure demand.
     k_hot: hot-pair circuit slices appended to the base cycle each epoch
         (0 = never touch the schedule, only exercise the recompile loop).
+        Only meaningful for scheduler="hot_slices".
+    bvn_slices / bvn_perms / sinkhorn_iters: the BvN epoch-cycle length,
+        decomposition depth, and Sinkhorn normalization rounds
+        (scheduler="bvn" only).
     max_hop / kpaths: forwarded to the routing compiler.
     """
 
     epoch_slices: int = 32
     num_epochs: int = 8
     scheme: str = "hoho"
+    scheduler: str = "hot_slices"
     k_hot: int = 4
+    bvn_slices: int = 8
+    bvn_perms: int = 8
+    sinkhorn_iters: int = 50
     max_hop: int = 4
     kpaths: int = 4
 
@@ -89,28 +117,42 @@ class ReconfigResult:
     hot_src: np.ndarray          # [num_epochs, k_hot] chosen pairs (-1 none)
     hot_dst: np.ndarray          # [num_epochs, k_hot]
     demand_total: np.ndarray     # [num_epochs] pending bytes at epoch start
+    epoch_conn: np.ndarray       # [num_epochs, T_e, N, U] schedule per epoch
 
 
 def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
                 rcfg: ReconfigConfig) -> ReconfigResult:
     """Run the traffic-aware reconfiguration loop (see module docstring).
 
-    ``sched`` is the *base* cycle ([T0, N, U]); each epoch simulates on an
-    extended cycle of ``T0 + rcfg.k_hot`` slices whose tail carries the
-    current hot-pair circuits. All TO schemes hash multipath per packet, and
-    the table lookup runs the plain-gather backend inside the epoch scan.
+    ``sched`` is the *base* cycle ([T0, N, U]). With
+    ``scheduler="hot_slices"`` each epoch simulates on an extended cycle of
+    ``T0 + rcfg.k_hot`` slices whose tail carries the current hot-pair
+    circuits; ``"edmonds"`` epochs hold one matching topology ([1, N, U]) and
+    ``"bvn"`` epochs cycle a ``rcfg.bvn_slices``-slice BvN schedule — both
+    derived purely from the measured demand (the base cycle only fixes N and
+    U). All TO schemes hash multipath per packet, and the table lookup runs
+    the plain-gather backend inside the epoch scan.
     """
     if rcfg.scheme not in routing_jnp.SCHEMES:
         raise ValueError(f"unknown TO scheme {rcfg.scheme!r}: expected one "
                          f"of {routing_jnp.SCHEMES}")
+    if rcfg.scheduler not in topology_jnp.SCHEDULERS:
+        raise ValueError(f"unknown scheduler {rcfg.scheduler!r}: expected "
+                         f"one of {topology_jnp.SCHEDULERS}")
     if cfg.lookup_impl != "jnp":
         raise ValueError("reconfigure() supports lookup_impl='jnp' only "
                          "(the Pallas lookup kernel is a per-deploy path)")
     T0, N, U = sched.conn.shape
-    # epoch-0 placeholder hot slices (dark): fixes the extended cycle shape
-    conn0 = np.concatenate(
-        [sched.conn,
-         np.full((rcfg.k_hot, N, U), -1, dtype=np.int32)], axis=0)
+    # epoch-0 placeholder schedule (dark where demand-derived): fixes the
+    # static epoch-cycle shape for the scan
+    if rcfg.scheduler == "hot_slices":
+        conn0 = np.concatenate(
+            [sched.conn,
+             np.full((rcfg.k_hot, N, U), -1, dtype=np.int32)], axis=0)
+    elif rcfg.scheduler == "edmonds":
+        conn0 = np.full((1, N, U), -1, dtype=np.int32)
+    else:  # bvn
+        conn0 = np.full((rcfg.bvn_slices, N, U), -1, dtype=np.int32)
     dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
     j = dict(
         conn=dev(conn0),
@@ -141,9 +183,26 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         demand = jax.ops.segment_sum(
             jnp.where(rem, j["size"], 0), pair_key, num_segments=N * N)
 
-        # 2. re-derive the schedule: top-K demand pairs get dedicated
-        # bidirectional circuits in the appended hot slices
-        if K > 0:
+        # 2. re-derive the schedule from the measured demand
+        hot_src = jnp.full((K,), -1, jnp.int32)
+        hot_dst = jnp.full((K,), -1, jnp.int32)
+        if rcfg.scheduler == "edmonds":
+            # one max-weight-matching topology (c-Through)
+            conn_e = topology_jnp.edmonds_conn(
+                demand.reshape(N, N).astype(jnp.float32), n_uplinks=U)
+        elif rcfg.scheduler == "bvn":
+            # a BvN cycle over the demand matrix (Mordia); uplink 0 carries
+            # the permutations, extra uplinks stay dark
+            bvn = topology_jnp.bvn_conn(
+                demand.reshape(N, N).astype(jnp.float32),
+                num_slices=rcfg.bvn_slices, max_perms=rcfg.bvn_perms,
+                sinkhorn_iters=rcfg.sinkhorn_iters)
+            conn_e = jnp.concatenate(
+                [bvn, jnp.full((rcfg.bvn_slices, N, U - 1), -1, jnp.int32)],
+                axis=2) if U > 1 else bvn
+        elif K > 0:
+            # top-K demand pairs get dedicated bidirectional circuits in the
+            # appended hot slices
             vals, idx = jax.lax.top_k(jnp.where(offdiag, demand, -1), K)
             hs, hd = (idx // N).astype(jnp.int32), (idx % N).astype(jnp.int32)
             ok = vals > 0
@@ -157,8 +216,6 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
                 jnp.where(ok, hs, -1))
             conn_e = jnp.concatenate([base_conn, extra], axis=0)
         else:
-            hot_src = jnp.full((K,), -1, jnp.int32)
-            hot_dst = jnp.full((K,), -1, jnp.int32)
             conn_e = base_conn
 
         # 3. recompile the time-flow tables on-device
@@ -173,7 +230,8 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         state, ys = jax.lax.scan(step, state,
                                  t0 + jnp.arange(E, dtype=jnp.int32))
         ys.update(hot_src=hot_src, hot_dst=hot_dst,
-                  demand_total=jnp.sum(jnp.where(rem, j["size"], 0)))
+                  demand_total=jnp.sum(jnp.where(rem, j["size"], 0)),
+                  epoch_conn=conn_e)
         return state, ys
 
     state0 = _init_state(j, num_flows)
@@ -192,4 +250,5 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         reorder_cnt=final["reorder"],
         hot_src=ys["hot_src"], hot_dst=ys["hot_dst"],
         demand_total=ys["demand_total"],
+        epoch_conn=ys["epoch_conn"],
     )

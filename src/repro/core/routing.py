@@ -33,6 +33,10 @@ The TO compilers never iterate per (slice, node, destination) in Python:
    a reversed ``minimum.accumulate`` (suffix-min) over a doubled schedule
    cycle; ``opera`` runs a batched all-destination Bellman/BFS over ``conn``
    instead of per-slice networkx searches.
+4. The TA compilers (``ecmp``/``wcmp``/``ksp``) are batched the same way:
+   all-pairs Bellman-round distance tensors over the ``[N, N]`` instance
+   adjacency replace the per-pair networkx searches (this module no longer
+   imports networkx at all).
 
 Host vs. device compilation (``compile_impl``)
 ----------------------------------------------
@@ -53,7 +57,6 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
-import networkx as nx
 
 from .topology import Schedule
 
@@ -574,40 +577,94 @@ def hoho(sched: Schedule, max_hop: int = 4, compile_impl: str = "numpy",
 
 # ---------------------------------------------------------------------------
 # TA routing algorithms (single topology instance)
+#
+# Batched all-pairs formulation (no per-pair graph searches): all three
+# compilers derive next hops from Bellman-round distance tensors over the
+# [N, N] instance adjacency. ``ecmp``/``wcmp`` are bit-identical to the
+# previous per-destination networkx BFS (the slot order is the uplink
+# first-occurrence order, which is exactly ``DiGraph.successors``'s edge
+# insertion order); ``ksp`` ranks first hops by the canonical key
+# (shortest simple-path length through the hop, then uplink order). Both
+# selections take the k smallest path lengths, so the selected length
+# multiset always equals Yen's; the hop *sets* are identical whenever the
+# k cut does not fall inside a group of equal-length hops (always true for
+# U <= k), and within the selection only the order of equal-length hops is
+# canonicalized — Yen's emission order there depended on networkx's
+# internal BFS accidents.
+# Reference loop implementations live in ``tests/test_routing_golden.py``.
 # ---------------------------------------------------------------------------
 
-def _instance_graph(sched: Schedule, ts: int = 0) -> nx.DiGraph:
-    N, U = sched.conn.shape[1:]
-    g = nx.DiGraph()
-    g.add_nodes_from(range(N))
-    for n in range(N):
-        for k in range(U):
-            m = sched.conn[ts, n, k]
-            if m >= 0:
-                g.add_edge(n, int(m))
-    return g
+
+def _uplink_first_occurrence(peer: np.ndarray) -> np.ndarray:
+    """keep[n, u]: uplink u is the first occurrence of its (live) peer in
+    node n's uplink list — the dedup rule shared by every slot collector."""
+    N, U = peer.shape
+    ok = peer >= 0
+    dup = np.zeros((N, U), dtype=bool)
+    for u in range(1, U):
+        for u2 in range(u):
+            dup[:, u] |= ok[:, u] & (peer[:, u2] == peer[:, u])
+    return ok & ~dup
 
 
-def _shortest_next_hops(g: nx.DiGraph, n_nodes: int, kpaths: int):
-    tf_next = np.full((1, n_nodes, n_nodes, kpaths), -1, dtype=np.int32)
-    for d in range(n_nodes):
-        dist = dict(nx.single_target_shortest_path_length(g, d))
-        for n in range(n_nodes):
-            if n == d or n not in dist:
-                continue
-            slot = 0
-            for m in g.successors(n):
-                if dist.get(m, 1 << 30) == dist[n] - 1 and slot < kpaths:
-                    tf_next[0, n, d, slot] = m
-                    slot += 1
+_DIST_BIG = np.int64(1 << 20)
+
+
+def _all_pairs_dist(peer: np.ndarray, drop: int | None = None) -> np.ndarray:
+    """dist[n, d]: BFS hop count over the instance adjacency (``_DIST_BIG``
+    when unreachable), via synchronous Bellman rounds — one batched gather +
+    min per round, exact after at most N-1 rounds. ``drop`` removes a node
+    (no edges in or out), for simple-path lengths that must avoid a source.
+    """
+    N, U = peer.shape
+    ok = peer >= 0
+    if drop is not None:
+        ok = ok & (np.arange(N)[:, None] != drop) & (peer != drop)
+    pclip = np.clip(peer, 0, N - 1)
+    diag = np.arange(N)
+    dist = np.full((N, N), _DIST_BIG, np.int64)
+    dist[diag, diag] = 0
+    for _ in range(max(N - 1, 1)):
+        nd = np.where(ok[:, :, None], dist[pclip], _DIST_BIG)   # [N, U, D]
+        new = np.minimum(dist, 1 + nd.min(axis=1))
+        if np.array_equal(new, dist):
+            break
+        dist = new
+    if drop is not None:
+        dist[drop, :] = _DIST_BIG
+        dist[drop, drop] = 0
+    return dist
+
+
+def _scatter_slots(sel: np.ndarray, rank: np.ndarray, peer: np.ndarray,
+                   kpaths: int) -> np.ndarray:
+    """Scatter selected (n, u, d) hop events into contiguous multipath slots:
+    the event ranked r in its (n, d) column fills ``tf_next[0, n, d, r]``."""
+    N = sel.shape[0]
+    tf_next = np.full((1, N, N, kpaths), -1, dtype=np.int32)
+    n_i, u_i, d_i = np.nonzero(sel)
+    tf_next[0, n_i, d_i, rank[n_i, u_i, d_i]] = peer[n_i, u_i]
     return tf_next
 
 
 def ecmp(sched: Schedule, kpaths: int = 4, **_) -> CompiledRouting:
     """Equal-cost multi-path on one topology instance; time fields wildcarded
-    (the flow-table reduction of Fig. 3c)."""
+    (the flow-table reduction of Fig. 3c).
+
+    Batched compile: one all-destination distance tensor, then every
+    (node, uplink, dst) triple whose peer is one hop closer to dst becomes a
+    slot, ranked in uplink (first-occurrence) order — bit-identical to the
+    per-destination BFS + ``successors`` walk it replaces.
+    """
     N = sched.num_nodes
-    tf_next = _shortest_next_hops(_instance_graph(sched), N, kpaths)
+    peer = sched.conn[0]                                    # [N, U]
+    keep = _uplink_first_occurrence(peer)
+    dist = _all_pairs_dist(peer)
+    pclip = np.clip(peer, 0, N - 1)
+    closer = dist[pclip] == dist[:, None, :] - 1            # [N, U, D]
+    good = keep[:, :, None] & closer & (dist[:, None, :] < _DIST_BIG)
+    rank = np.cumsum(good, axis=1) - good
+    tf_next = _scatter_slots(good & (rank < kpaths), rank, peer, kpaths)
     tf_dep = np.zeros_like(tf_next)
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
                            multipath="flow")
@@ -618,41 +675,62 @@ def wcmp(sched: Schedule, tm: np.ndarray | None = None, kpaths: int = 4, **_) ->
     downstream capacity (uplink multiplicity) toward the destination."""
     r = ecmp(sched, kpaths=kpaths)
     N = sched.num_nodes
-    weights = np.zeros(r.tf_next.shape, dtype=np.float32)
     conn0 = sched.conn[0]
-    for n in range(N):
-        for d in range(N):
-            for s in range(r.k):
-                m = r.tf_next[0, n, d, s]
-                if m >= 0:
-                    weights[0, n, d, s] = max(1, int(np.sum(conn0[n] == m)))
-    r.weights = weights
+    # cnt[n, m]: parallel uplinks node n points at peer m
+    cnt = np.zeros((N, N), dtype=np.int64)
+    n_i, u_i = np.nonzero(conn0 >= 0)
+    np.add.at(cnt, (n_i, conn0[n_i, u_i]), 1)
+    nxt = r.tf_next[0]                                      # [N, D, k]
+    valid = nxt >= 0
+    mult = cnt[np.arange(N)[:, None, None], np.clip(nxt, 0, N - 1)]
+    r.weights = np.where(valid, np.maximum(mult, 1), 0)[None].astype(np.float32)
     r.multipath = "flow"
     return r
 
 
 def ksp(sched: Schedule, k: int = 4, max_hop: int = 6, **_) -> CompiledRouting:
     """k-shortest-path routing (Flat-tree style): merge the first hops of the
-    k shortest simple paths per pair into the multipath slots."""
+    k shortest simple paths per pair into the multipath slots, admitting
+    paths longer than the shortest when they add first-hop diversity.
+
+    Batched compile: the shortest *simple* path from ``s`` through first hop
+    ``m`` has length ``L(m) = 1 + dist(m -> d in G minus s)`` (a simple path
+    never revisits its source), so the Yen enumeration's distinct first hops
+    are exactly the ``m`` with ``L(m) <= max_hop``, ranked by ``L(m)``. One
+    dropped-source distance tensor per source replaces the per-pair
+    ``shortest_simple_paths`` generators; equal-``L`` hops rank in uplink
+    order (a canonical order — Yen's emission order among equal-length
+    paths followed networkx's internal BFS iteration order). Both rankings
+    keep the ``k`` shortest, so the selected path-length multiset always
+    equals Yen's; the hop *sets* coincide whenever the ``k`` cut does not
+    split a group of equal-length hops (always true for ``U <= k``) — both
+    properties asserted by the golden tests against the networkx loop.
+    """
     N = sched.num_nodes
-    g = _instance_graph(sched)
-    tf_next = np.full((1, N, N, k), -1, dtype=np.int32)
+    peer = sched.conn[0]                                    # [N, U]
+    U = peer.shape[1]
+    keep = _uplink_first_occurrence(peer)
+    pclip = np.clip(peer, 0, N - 1)
+    # L[s, u, d] = 1 + dist(peer(s, u) -> d) in the graph without s
+    L = np.empty((N, U, N), np.int64)
     for s_node in range(N):
-        for d in range(N):
-            if s_node == d or not nx.has_path(g, s_node, d):
-                continue
-            slot = 0
-            seen = set()
-            try:
-                for path in nx.shortest_simple_paths(g, s_node, d):
-                    if len(path) - 1 > max_hop or slot >= k:
-                        break
-                    if path[1] not in seen:
-                        tf_next[0, s_node, d, slot] = path[1]
-                        seen.add(path[1])
-                        slot += 1
-            except nx.NetworkXNoPath:
-                continue
+        L[s_node] = 1 + _all_pairs_dist(peer, drop=s_node)[pclip[s_node]]
+    diag = np.arange(N)
+    good = keep[:, :, None] & (L <= max_hop)
+    good[diag, :, diag] = False                             # n == d
+    # rank events per (s, d) by (L, uplink): stable argsort on a fused key
+    NEVER = np.int64(1) << 40
+    key = np.where(good, L * U + np.arange(U, dtype=np.int64)[None, :, None],
+                   NEVER)
+    key_sd = key.transpose(0, 2, 1)                         # [S, D, U]
+    order = np.argsort(key_sd, axis=2, kind="stable")
+    sortedkey = np.take_along_axis(key_sd, order, axis=2)
+    rank_sorted = np.where(sortedkey < NEVER,
+                           np.arange(U, dtype=np.int64)[None, None, :], 0)
+    rank_sd = np.zeros((N, N, U), dtype=np.int64)
+    np.put_along_axis(rank_sd, order, rank_sorted, axis=2)
+    rank = rank_sd.transpose(0, 2, 1)                       # [S, U, D]
+    tf_next = _scatter_slots(good & (rank < k), rank, peer, k)
     tf_dep = np.zeros_like(tf_next)
     return CompiledRouting(tf_next, tf_dep, tf_next.copy(), tf_dep.copy(),
                            multipath="flow")

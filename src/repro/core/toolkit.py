@@ -8,12 +8,14 @@ paper ships so students can see time-based routing without hardware.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 from .routing import CompiledRouting
 from .topology import Schedule
 
-__all__ = ["trace_packet", "format_schedule"]
+__all__ = ["trace_packet", "format_schedule", "check_tables"]
 
 
 def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
@@ -73,6 +75,135 @@ def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
         tbl_next, tbl_dep = routing.tf_next, routing.tf_dep
     lines.append("  ... trace truncated (max_steps)")
     return "\n".join(lines)
+
+
+def check_tables(sched: Schedule, routing: CompiledRouting,
+                 max_hops: int = 16, require_delivery: bool = False,
+                 hashes: tuple[int, ...] = (0,),
+                 max_steps: int = 64) -> list[str]:
+    """Time-flow invariant checker: verify a compiled routing against the
+    schedule it was compiled for. Returns a list of human-readable violation
+    messages (empty = all invariants hold) so tests can assert
+    ``check_tables(...) == []`` and property-based sweeps get a narrated
+    counterexample for free.
+
+    Static invariants, over every table cell:
+
+    * **slot contiguity** — valid multipath slots are contiguous from slot 0
+      (the fabric hashes over the valid count);
+    * **sane actions** — egress ids are in ``[0, N]`` (``N`` = electrical)
+      and departure offsets are non-negative;
+    * **liveness** — every entry's departure slice actually connects the hop
+      under the schedule: for arrival slice ``t`` (mod the table cycle
+      ``Tr``) the circuit ``n -> egress`` must be up in schedule slice
+      ``(t_abs + dep) % T`` for *every* absolute slice ``t_abs ≡ t (mod
+      Tr)``, i.e. for each residue of the combined ``lcm(T, Tr)`` cycle.
+
+    Walk invariants, for every (src, dst, t0 in cycle, hash in ``hashes``)
+    — the same walk :func:`trace_packet` narrates, so a violation here is
+    reproducible with a one-line trace:
+
+    * **time monotonicity** — delivery/departure slots never move backwards
+      along a path (each hop departs at or after the packet's arrival);
+    * **hop bound** — a delivered packet takes at most ``max_hops`` hops;
+    * **no silent loops** — a walk that neither delivers nor sticks within
+      ``max_steps`` steps is reported;
+    * **delivery** (only when ``require_delivery``) — every pair's walk must
+      reach its destination (schedules without full reachability should
+      leave this off).
+
+    ``hashes`` picks the multipath slot at every hop, like the fabric's
+    flow-level hashing. Note that ``ksp``'s slots beyond 0 deliberately
+    admit longer-than-shortest paths, and a fixed non-zero hash at every hop
+    is not loop-free (true of the networkx implementation it replaced, too)
+    — sweep such schemes with ``hashes=(0,)``.
+    """
+    bad: list[str] = []
+    T, N, _U = sched.conn.shape
+    tf_n, tf_d = routing.tf_next, routing.tf_dep
+    inj_n, inj_d = routing.inj_next, routing.inj_dep
+    Tr = routing.num_slices
+
+    for name, nxt, dep in (("tf", tf_n, tf_d), ("inj", inj_n, inj_d)):
+        valid = nxt >= 0
+        # slot contiguity: once invalid, all later slots invalid
+        gap = valid[..., 1:] & ~valid[..., :-1]
+        for t, n, d, s in zip(*np.nonzero(gap)):
+            bad.append(f"{name}: non-contiguous slot {s + 1} at "
+                       f"(t={t}, node={n}, dst={d})")
+        if np.any(nxt > N):
+            bad.append(f"{name}: egress id beyond electrical ({N})")
+        if np.any(dep[valid] < 0):
+            bad.append(f"{name}: negative departure offset")
+        # liveness of optical entries across the combined schedule cycle
+        reps = math.lcm(T, Tr) // Tr
+        t_i, n_i, d_i, s_i = np.nonzero(valid & (nxt < N))
+        for rep in range(reps):
+            t_abs = t_i + rep * Tr
+            live = sched.conn[(t_abs + dep[t_i, n_i, d_i, s_i]) % T, n_i, :] \
+                == nxt[t_i, n_i, d_i, s_i][:, None]
+            for j in np.nonzero(~live.any(axis=1))[0][:8]:
+                bad.append(
+                    f"{name}: dark circuit {n_i[j]}->{nxt[t_i[j], n_i[j], d_i[j], s_i[j]]} "
+                    f"for (arr={t_i[j]}, dst={d_i[j]}, slot={s_i[j]}) at "
+                    f"abs slice {t_abs[j]} dep +{dep[t_i[j], n_i[j], d_i[j], s_i[j]]}")
+        if len(bad) > 64:
+            return bad
+
+    cycle = math.lcm(T, Tr)
+    for src in range(N):
+        for dst in range(N):
+            if src == dst:
+                continue
+            for t0 in range(cycle):
+                for hashv in hashes:
+                    msg = _check_walk(sched, routing, src, dst, t0, hashv,
+                                      max_hops, require_delivery, max_steps)
+                    if msg:
+                        bad.append(msg)
+                        if len(bad) > 64:
+                            return bad
+    return bad
+
+
+def _check_walk(sched: Schedule, routing: CompiledRouting, src: int,
+                dst: int, t0: int, hashv: int, max_hops: int,
+                require_delivery: bool, max_steps: int) -> str | None:
+    """One table walk (same semantics as :func:`trace_packet`); returns a
+    violation message or None."""
+    T = routing.num_slices
+    node, t, hops = src, t0, 0
+    tbl_next, tbl_dep = routing.inj_next, routing.inj_dep
+    where = f"walk {src}->{dst} @t0={t0} h={hashv}"
+    for _ in range(max_steps):
+        if node == dst:
+            if hops > max_hops:
+                return f"{where}: delivered in {hops} hops > max_hops={max_hops}"
+            return None
+        row_n = tbl_next[t % T, node, dst]
+        row_d = tbl_dep[t % T, node, dst]
+        nvalid = int((row_n >= 0).sum())
+        if nvalid == 0:
+            if require_delivery:
+                return f"{where}: stuck at node {node} slice {t} (no entry)"
+            return None
+        nxt = int(row_n[hashv % nvalid])
+        off = int(row_d[hashv % nvalid])
+        if off < 0:
+            return f"{where}: time moves backwards at node {node} (dep {off})"
+        wire_t = t + off
+        if nxt < sched.num_nodes:
+            if not sched.has_circuit(node, nxt, wire_t):
+                return (f"{where}: rides dark circuit {node}->{nxt} "
+                        f"at slice {wire_t}")
+            node, t = nxt, wire_t
+        else:
+            node, t = dst, wire_t + 1    # electrical egress: 1-slice transit
+        tbl_next, tbl_dep = routing.tf_next, routing.tf_dep
+        hops += 1
+        if hops > max_hops:
+            return f"{where}: exceeds max_hops={max_hops} without delivery"
+    return f"{where}: no delivery or stick within {max_steps} steps (loop?)"
 
 
 def format_schedule(sched: Schedule, max_slices: int = 8) -> str:

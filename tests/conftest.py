@@ -1,14 +1,25 @@
 """Shared test configuration.
 
 Some test modules use ``hypothesis`` for property-based sweeps. The library
-is optional in minimal containers; when it is absent we skip collecting those
-modules instead of erroring the whole run at import time.
+is optional in minimal containers; when it is absent we skip collecting
+those modules instead of erroring the whole run at import time — *except in
+CI*, where a missing hypothesis would silently drop the property suites
+(exactly what happened to the seed's topology/routing sweeps), so there it
+is a hard collection error instead.
 """
 import importlib.util
+import os
 
 if importlib.util.find_spec("hypothesis") is None:
+    if os.environ.get("CI"):
+        raise RuntimeError(
+            "hypothesis is not installed but CI=1: the property-based "
+            "suites (test_invariants_prop, test_routing, test_topology, "
+            "test_kernels, test_distributed, test_optim) would be silently "
+            "skipped. Install hypothesis in the CI environment.")
     collect_ignore = [
         "test_distributed.py",
+        "test_invariants_prop.py",
         "test_kernels.py",
         "test_optim.py",
         "test_routing.py",

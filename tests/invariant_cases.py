@@ -1,0 +1,79 @@
+"""Shared time-flow invariant cases: one parameterized runner used by both
+the deterministic sweep (``test_invariants.py``, no hypothesis dependency)
+and the property-based sweep (``test_invariants_prop.py``, hypothesis).
+
+A case = (schedule source, routing scheme) -> compile the tables, run
+:func:`repro.core.toolkit.check_tables`, assert no violations. Schedule
+sources cover the cyclic TO schedules (round-robin, seeded random) and the
+TA single-instance schedules produced by the *device* traffic-matrix
+schedulers (:mod:`repro.core.topology_jnp` — ``edmonds_conn`` / ``bvn_conn``
+on a seeded random TM), so the jnp scheduler family is swept against every
+routing scheme too.
+"""
+import numpy as np
+
+from repro.core import (direct, ecmp, hoho, ksp, opera, round_robin,
+                        toolkit, ucmp, vlb, wcmp)
+from repro.core.topology import Schedule
+
+# (name, compiler, multipath hashes that must be loop-free). ksp's slots
+# beyond 0 deliberately admit longer-than-shortest paths and are not
+# loop-free under a fixed per-flow hash (see toolkit.check_tables).
+TO_SCHEMES = [
+    ("direct", direct, (0, 1)),
+    ("vlb", vlb, (0, 1, 2)),
+    ("opera", opera, (0, 1)),
+    ("ucmp", ucmp, (0, 1, 2)),
+    ("hoho", hoho, (0, 1)),
+]
+TA_SCHEMES = [
+    ("ecmp", ecmp, (0, 1, 2)),
+    ("wcmp", wcmp, (0, 1, 2)),
+    ("ksp", ksp, (0,)),
+]
+ALL_SCHEMES = TO_SCHEMES + TA_SCHEMES
+SCHEME_BY_NAME = {name: (alg, hashes) for name, alg, hashes in ALL_SCHEMES}
+
+
+def random_schedule(seed: int, n: int, T: int, U: int,
+                    fill: float = 0.7) -> Schedule:
+    """Seeded random directed circuit schedule (no self-circuits; dark
+    links) — the same generator the routing golden tests sweep."""
+    rng = np.random.default_rng(seed)
+    conn = rng.integers(0, n, size=(T, n, U)).astype(np.int32)
+    self_loop = conn == np.arange(n, dtype=np.int32)[None, :, None]
+    conn = np.where(self_loop, (conn + 1) % n, conn)
+    dark = rng.random(size=conn.shape) > fill
+    return Schedule(np.where(dark, np.int32(-1), conn))
+
+
+def scheduler_schedule(kind: str, seed: int, n: int) -> Schedule:
+    """A TA schedule from the on-device traffic-matrix schedulers, driven by
+    a seeded random demand matrix."""
+    import jax.numpy as jnp
+
+    from repro.core import topology_jnp
+
+    rng = np.random.default_rng(seed)
+    tm = rng.random((n, n)) * 100
+    np.fill_diagonal(tm, 0)
+    if kind == "edmonds":
+        conn = np.asarray(topology_jnp.edmonds_conn(jnp.asarray(tm)))
+    elif kind == "bvn":
+        conn = np.asarray(topology_jnp.bvn_conn(jnp.asarray(tm),
+                                                num_slices=6, max_perms=4))
+    else:
+        raise ValueError(kind)
+    return Schedule(conn)
+
+
+def run_case(scheme: str, sched: Schedule, require_delivery: bool = False,
+             max_hops: int = 32) -> None:
+    """Compile ``scheme`` against ``sched`` and assert every time-flow
+    invariant holds (liveness, contiguity, monotone time, hop bound)."""
+    alg, hashes = SCHEME_BY_NAME[scheme]
+    routing = alg(sched)
+    bad = toolkit.check_tables(sched, routing, max_hops=max_hops,
+                               require_delivery=require_delivery,
+                               hashes=hashes)
+    assert bad == [], f"{scheme}: {bad[:5]}"

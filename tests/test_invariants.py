@@ -1,0 +1,123 @@
+"""Deterministic time-flow invariant sweep (no hypothesis dependency — this
+module runs in every environment; ``test_invariants_prop.py`` widens the
+same cases with property-based search where hypothesis is installed).
+
+Every routing scheme (TO and TA) is compiled against round-robin cycles,
+seeded random schedules, and schedules emitted by the on-device
+traffic-matrix schedulers, then validated with
+:func:`repro.core.toolkit.check_tables`.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CompiledRouting, round_robin, toolkit
+from repro.core.topology import Schedule
+
+from invariant_cases import (ALL_SCHEMES, TA_SCHEMES, TO_SCHEMES,
+                             random_schedule, run_case, scheduler_schedule)
+
+TO_NAMES = [s[0] for s in TO_SCHEMES]
+TA_NAMES = [s[0] for s in TA_SCHEMES]
+
+
+@pytest.mark.parametrize("scheme", TO_NAMES)
+@pytest.mark.parametrize("n,u", [(6, 1), (8, 2), (9, 3)])
+def test_round_robin_invariants(scheme, n, u):
+    """On the fully-reachable rotor cycles every walk must also deliver."""
+    run_case(scheme, round_robin(n, u), require_delivery=True)
+
+
+@pytest.mark.parametrize("scheme", TO_NAMES)
+@pytest.mark.parametrize("seed", range(4))
+def test_random_schedule_invariants(scheme, seed):
+    rng = np.random.default_rng(seed + 100)
+    n, T, U = int(rng.integers(4, 9)), int(rng.integers(1, 6)), \
+        int(rng.integers(1, 4))
+    run_case(scheme, random_schedule(seed, n, T, U))
+
+
+@pytest.mark.parametrize("scheme", TA_NAMES)
+@pytest.mark.parametrize("seed", range(4))
+def test_random_instance_invariants(scheme, seed):
+    rng = np.random.default_rng(seed + 200)
+    n, U = int(rng.integers(4, 10)), int(rng.integers(1, 4))
+    run_case(scheme, random_schedule(seed, n, T=1, U=U))
+
+
+@pytest.mark.parametrize("kind,scheme", [
+    # edmonds holds one topology instance -> TA and TO schemes both apply
+    ("edmonds", "ecmp"), ("edmonds", "wcmp"), ("edmonds", "ksp"),
+    ("edmonds", "direct"), ("edmonds", "ucmp"),
+    # bvn cycles several permutations -> the time-aware TO schemes apply
+    # (TA tables wildcard time and are only valid on num_slices == 1)
+    ("bvn", "direct"), ("bvn", "ucmp"), ("bvn", "hoho"), ("bvn", "vlb"),
+])
+def test_device_scheduler_invariants(kind, scheme):
+    """Schedules emitted by the jnp traffic-matrix schedulers must compile
+    into invariant-clean tables under the routing families that match their
+    instance structure."""
+    run_case(scheme, scheduler_schedule(kind, seed=5, n=8))
+
+
+def test_check_tables_flags_dark_circuit():
+    """The checker must actually detect a broken table (not vacuously
+    pass): an entry over a circuit the schedule never provides."""
+    sched = round_robin(6, 1)
+    from repro.core import hoho
+    r = hoho(sched)
+    r.tf_next[0, 0, 3, 0] = 2          # 0->2 is not up in slice 0
+    r.tf_dep[0, 0, 3, 0] = 0
+    bad = toolkit.check_tables(sched, r)
+    assert any("dark circuit" in m for m in bad)
+
+
+def test_check_tables_flags_gap_and_negative_dep():
+    T, N = 1, 4
+    nxt = np.full((T, N, N, 2), -1, dtype=np.int32)
+    dep = np.zeros((T, N, N, 2), dtype=np.int32)
+    nxt[0, 0, 1, 1] = 1                # slot 1 valid, slot 0 not
+    conn = np.full((1, N, 1), -1, dtype=np.int32)
+    conn[0, 0, 0] = 1
+    r = CompiledRouting(nxt, dep, nxt.copy(), dep.copy())
+    bad = toolkit.check_tables(Schedule(conn), r)
+    assert any("non-contiguous" in m for m in bad)
+    nxt2 = np.full((T, N, N, 1), -1, dtype=np.int32)
+    dep2 = np.zeros((T, N, N, 1), dtype=np.int32)
+    nxt2[0, 0, 1, 0] = 1
+    dep2[0, 0, 1, 0] = -2
+    r2 = CompiledRouting(nxt2, dep2, nxt2.copy(), dep2.copy())
+    assert any("negative" in m
+               for m in toolkit.check_tables(Schedule(conn), r2))
+
+
+def test_check_tables_flags_loop():
+    sched = round_robin(4, 1)
+    T, N = sched.num_slices, 4
+    nxt = np.full((T, N, N, 1), -1, dtype=np.int32)
+    dep = np.zeros((T, N, N, 1), dtype=np.int32)
+    # 0 <-> 1 forever, over circuits that are live every slice
+    conn = np.zeros((1, N, 2), dtype=np.int32)
+    conn[0, 0, 0], conn[0, 1, 0] = 1, 0
+    conn[0, 2, 0], conn[0, 3, 0] = 3, 2
+    conn[0, :, 1] = -1
+    nxt3 = np.full((1, N, N, 1), -1, dtype=np.int32)
+    dep3 = np.zeros((1, N, N, 1), dtype=np.int32)
+    nxt3[0, 0, 3, 0] = 1
+    nxt3[0, 1, 3, 0] = 0
+    r = CompiledRouting(nxt3, dep3, nxt3.copy(), dep3.copy())
+    bad = toolkit.check_tables(Schedule(conn), r, max_hops=8)
+    assert any("max_hops" in m or "loop" in m for m in bad)
+
+
+def test_check_tables_mismatched_cycles():
+    """TA tables (Tr == 1) deployed on a multi-slice schedule: the entry
+    must be live at *every* absolute slice, which the checker verifies over
+    the combined cycle."""
+    sched = round_robin(4, 1)             # 3-slice cycle
+    N = 4
+    nxt = np.full((1, N, N, 1), -1, dtype=np.int32)
+    dep = np.zeros((1, N, N, 1), dtype=np.int32)
+    nxt[0, 0, 1, 0] = 1                   # 0->1 only live in slice 0
+    r = CompiledRouting(nxt, dep, nxt.copy(), dep.copy())
+    bad = toolkit.check_tables(sched, r)
+    assert any("dark circuit" in m for m in bad)

@@ -1,0 +1,50 @@
+"""Property-based time-flow invariant sweep (hypothesis): random schedules
+x every routing scheme (TO and TA), including schedules emitted by the
+on-device traffic-matrix schedulers.
+
+The deterministic subset of these cases lives in ``test_invariants.py`` (no
+hypothesis dependency); this module lets hypothesis search the schedule
+space for counterexamples. In CI the module always runs —
+``tests/conftest.py`` turns a missing hypothesis into a hard error there
+instead of a silent skip.
+"""
+from hypothesis import given, settings, strategies as st
+
+from invariant_cases import (TA_SCHEMES, TO_SCHEMES, random_schedule,
+                             run_case, scheduler_schedule)
+
+TO_NAMES = [s[0] for s in TO_SCHEMES]
+TA_NAMES = [s[0] for s in TA_SCHEMES]
+
+
+@settings(max_examples=25, deadline=None)
+@given(scheme=st.sampled_from(TO_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 9), T=st.integers(1, 6), U=st.integers(1, 3),
+       fill=st.floats(0.3, 1.0))
+def test_to_schemes_hold_invariants(scheme, seed, n, T, U, fill):
+    run_case(scheme, random_schedule(seed, n, T, U, fill))
+
+
+@settings(max_examples=25, deadline=None)
+@given(scheme=st.sampled_from(TA_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 10), U=st.integers(1, 3), fill=st.floats(0.3, 1.0))
+def test_ta_schemes_hold_invariants(scheme, seed, n, U, fill):
+    run_case(scheme, random_schedule(seed, n, T=1, U=U, fill=fill))
+
+
+@settings(max_examples=10, deadline=None)
+@given(scheme=st.sampled_from(TA_NAMES + ["direct", "ucmp", "hoho"]),
+       seed=st.integers(0, 2**16), n=st.integers(4, 10))
+def test_edmonds_scheduler_schedules_hold_invariants(scheme, seed, n):
+    """The greedy-matching scheduler holds one topology instance, so both
+    TA and TO routing must compile invariant-clean tables on it."""
+    run_case(scheme, scheduler_schedule("edmonds", seed, n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(scheme=st.sampled_from(["direct", "ucmp", "hoho", "vlb"]),
+       seed=st.integers(0, 2**16), n=st.integers(4, 10))
+def test_bvn_scheduler_schedules_hold_invariants(scheme, seed, n):
+    """BvN cycles several permutations, so the time-aware TO schemes apply
+    (TA tables wildcard time and are only valid on num_slices == 1)."""
+    run_case(scheme, scheduler_schedule("bvn", seed, n))

@@ -1,20 +1,35 @@
 """Tests for the jitted traffic-aware reconfiguration loop
 (:mod:`repro.core.reconfigure`).
 
-The load-bearing property: with ``k_hot=0`` the loop never changes the
-schedule, so recompiling the (bit-identical) device tables every epoch must
-reproduce a plain :func:`repro.core.fabric.simulate` run of the same length,
-bit for bit — this exercises the fabric step hot-swap path end to end.
+The load-bearing properties:
+
+* with ``k_hot=0`` the loop never changes the schedule, so recompiling the
+  (bit-identical) device tables every epoch must reproduce a plain
+  :func:`repro.core.fabric.simulate` run of the same length, bit for bit —
+  this exercises the fabric step hot-swap path end to end, including the
+  ``pushback=True`` configs the parity matrix previously under-covered;
+* for *every* scheduler (``hot_slices`` with ``k_hot > 0``, ``edmonds``,
+  ``bvn``) the recorded per-epoch schedules (``ReconfigResult.epoch_conn``)
+  replayed through *host*-compiled tables and the same fabric step must
+  reproduce the on-device run bit for bit — the host-replay parity that
+  pins the whole measure -> match -> recompile -> hot-swap epoch body.
 """
 import numpy as np
+import jax
+import jax.numpy as jnp
 import pytest
 
-from repro.core import (FabricConfig, FabricTables, ReconfigConfig, hoho,
-                        reconfigure, round_robin, synthesize, ucmp, vlb)
-from repro.core.fabric import simulate
+from repro.core import (FabricConfig, FabricTables, ReconfigConfig, direct,
+                        hoho, opera, reconfigure, round_robin, synthesize,
+                        ucmp, vlb)
+from repro.core.fabric import _init_state, _make_step, simulate
+from repro.core.topology import Schedule, deploy_topo_check
 
 N_TORS = 8
 SLICE_BYTES = 10_000
+
+HOST_ALG = {"direct": direct, "vlb": vlb, "opera": opera, "ucmp": ucmp,
+            "hoho": hoho}
 
 
 def _workload(load=0.5, seed=3, max_packets=2000):
@@ -22,12 +37,63 @@ def _workload(load=0.5, seed=3, max_packets=2000):
                       max_packets=max_packets, seed=seed)
 
 
+def _host_replay(wl, cfg, rcfg, epoch_conn):
+    """Replay a reconfigure run on the host: for each epoch, compile the
+    recorded schedule with the *numpy* reference compiler and drive the same
+    fabric step. Bit parity with the device loop pins measurement, schedule
+    derivation, and the on-device recompile at once."""
+    E = rcfg.epoch_slices
+    alg = HOST_ALG[rcfg.scheme]
+    num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    base = dict(
+        src=dev(wl.src), dst=dev(wl.dst), size=dev(wl.size),
+        t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
+        is_eleph=dev(wl.is_eleph, jnp.bool_),
+    )
+    state = None
+    stats = []
+    for e in range(rcfg.num_epochs):
+        sched_e = Schedule(np.asarray(epoch_conn[e]))
+        tables = FabricTables.build(sched_e, alg(sched_e))
+        j = dict(base, conn=dev(tables.conn),
+                 tf_next=dev(tables.tf_next), tf_dep=dev(tables.tf_dep),
+                 inj_next=dev(tables.inj_next), inj_dep=dev(tables.inj_dep),
+                 first_direct=dev(tables.first_direct))
+        if state is None:
+            state = _init_state(j, num_flows)
+        step = _make_step(j, cfg, True, num_flows)
+        state, ys = jax.lax.scan(
+            step, state, e * E + jnp.arange(E, dtype=jnp.int32))
+        stats.append(ys)
+    merged = {k: np.concatenate([np.asarray(s[k]) for s in stats])
+              for k in stats[0]}
+    return state, merged
+
+
+def _assert_replay_parity(res, state, merged):
+    np.testing.assert_array_equal(res.t_deliver, np.asarray(state["t_del"]))
+    np.testing.assert_array_equal(res.loc_final, np.asarray(state["loc"]))
+    np.testing.assert_array_equal(res.nhops, np.asarray(state["nhops"]))
+    assert res.reorder_cnt == int(np.asarray(state["reorder"]))
+    np.testing.assert_array_equal(res.delivered_bytes,
+                                  merged["delivered_bytes"])
+    np.testing.assert_array_equal(res.buf_bytes, merged["buf_bytes"])
+    np.testing.assert_array_equal(res.slice_miss, merged["slice_miss"])
+    np.testing.assert_array_equal(res.blocked_inj, merged["blocked_inj"])
+    np.testing.assert_array_equal(res.dropped, merged["dropped"])
+
+
 @pytest.mark.parametrize("alg,scheme", [(hoho, "hoho"), (ucmp, "ucmp"),
                                         (vlb, "vlb")])
-def test_k_hot_zero_equals_plain_simulate(alg, scheme):
+@pytest.mark.parametrize("cfg", [
+    FabricConfig(slice_bytes=SLICE_BYTES),
+    FabricConfig(slice_bytes=SLICE_BYTES, pushback=True),
+    FabricConfig(slice_bytes=SLICE_BYTES, pushback=True, offload=True),
+], ids=["base", "pushback", "pushback-offload"])
+def test_k_hot_zero_equals_plain_simulate(alg, scheme, cfg):
     sched = round_robin(N_TORS, 1)
     wl = _workload()
-    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
     rcfg = ReconfigConfig(epoch_slices=16, num_epochs=3, scheme=scheme,
                           k_hot=0)
     res_r = reconfigure(sched, wl, cfg, rcfg)
@@ -39,6 +105,7 @@ def test_k_hot_zero_equals_plain_simulate(alg, scheme):
                                   res_s.delivered_bytes)
     np.testing.assert_array_equal(res_r.buf_bytes, res_s.buf_bytes)
     np.testing.assert_array_equal(res_r.slice_miss, res_s.slice_miss)
+    np.testing.assert_array_equal(res_r.blocked_inj, res_s.blocked_inj)
     assert res_r.reorder_cnt == res_s.reorder_cnt
 
 
@@ -105,6 +172,116 @@ def test_rejects_bad_config():
     with pytest.raises(ValueError, match="scheme"):
         reconfigure(sched, wl, FabricConfig(),
                     ReconfigConfig(scheme="ecmp"))
+    with pytest.raises(ValueError, match="scheduler"):
+        reconfigure(sched, wl, FabricConfig(),
+                    ReconfigConfig(scheduler="sorn"))
     with pytest.raises(ValueError, match="lookup_impl"):
         reconfigure(sched, wl, FabricConfig(lookup_impl="pallas-interpret"),
                     ReconfigConfig())
+
+
+# ---------------------------------------------------------------------------
+# Host-replay parity: the recorded epoch schedules driven through host-
+# compiled tables must reproduce the on-device loop bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheduler,scheme,kw", [
+    ("hot_slices", "hoho", dict(k_hot=2)),
+    ("hot_slices", "direct", dict(k_hot=3)),
+    ("edmonds", "direct", {}),
+    ("edmonds", "ucmp", {}),
+    ("bvn", "direct", dict(bvn_slices=6, bvn_perms=4)),
+    ("bvn", "hoho", dict(bvn_slices=5, bvn_perms=5)),
+])
+def test_host_replay_parity(scheduler, scheme, kw):
+    sched = round_robin(N_TORS, 1)
+    wl = _workload(load=0.8, seed=7)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=3, scheme=scheme,
+                          scheduler=scheduler, **kw)
+    res = reconfigure(sched, wl, cfg, rcfg)
+    state, merged = _host_replay(wl, cfg, rcfg, res.epoch_conn)
+    _assert_replay_parity(res, state, merged)
+
+
+def test_host_replay_parity_pushback():
+    """The replay parity must also hold under push-back (sender-side
+    admission + source-bucket blocking take different fabric paths)."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload(load=1.5, seed=11)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES // 2, pushback=True)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=3, scheme="hoho",
+                          scheduler="hot_slices", k_hot=2)
+    res = reconfigure(sched, wl, cfg, rcfg)
+    state, merged = _host_replay(wl, cfg, rcfg, res.epoch_conn)
+    _assert_replay_parity(res, state, merged)
+
+
+# ---------------------------------------------------------------------------
+# The on-device TA scheduler family (edmonds / bvn)
+# ---------------------------------------------------------------------------
+
+
+def _hotpair_workload(src, dst, P=1500, seed=0):
+    from repro.core.fabric import Workload
+    rng = np.random.default_rng(seed)
+    return Workload(
+        src=np.full(P, src, np.int32), dst=np.full(P, dst, np.int32),
+        size=np.full(P, 1000, np.int32),
+        t_inject=rng.integers(0, 30, P).astype(np.int32),
+        flow=(np.arange(P, dtype=np.int32) % 16),
+        seq=np.arange(P, dtype=np.int32) // 16,
+        is_eleph=np.zeros(P, bool),
+    )
+
+
+def test_edmonds_scheduler_matches_hot_pair():
+    """A single-pair hotspot must be matched every epoch (the greedy
+    matching puts the dominant pair in the topology), its schedule must be
+    feasible, and demand must drain monotonically."""
+    sched = round_robin(N_TORS, 1)
+    wl = _hotpair_workload(2, 5)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=4, scheme="direct",
+                          scheduler="edmonds")
+    res = reconfigure(sched, wl, cfg, rcfg)
+    assert res.epoch_conn.shape == (4, 1, N_TORS, 1)
+    for e in range(4):
+        assert deploy_topo_check(res.epoch_conn[e])
+        assert res.epoch_conn[e, 0, 2, 0] == 5       # bidirectional match
+        assert res.epoch_conn[e, 0, 5, 0] == 2
+    assert np.all(np.diff(res.demand_total) <= 0)
+    assert (res.t_deliver >= 0).any()
+
+
+def test_bvn_scheduler_covers_hot_pair_and_is_feasible():
+    sched = round_robin(N_TORS, 1)
+    wl = _hotpair_workload(1, 6, seed=1)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=3, scheme="direct",
+                          scheduler="bvn", bvn_slices=6, bvn_perms=4)
+    res = reconfigure(sched, wl, cfg, rcfg)
+    assert res.epoch_conn.shape == (3, 6, N_TORS, 1)
+    for e in range(3):
+        assert deploy_topo_check(res.epoch_conn[e])
+        # the overloaded pair holds circuit slices in every epoch cycle
+        assert (res.epoch_conn[e, :, 1, 0] == 6).any()
+    assert np.all(np.diff(res.demand_total) <= 0)
+
+
+def test_demand_schedulers_beat_oblivious_rotor_on_hotspot():
+    """For a single-pair overload, deriving the schedule from demand
+    (matching or BvN) must deliver more than the oblivious rotor cycle over
+    the same horizon — the c-Through/Mordia case study in one assert."""
+    sched = round_robin(N_TORS, 1)
+    wl = _hotpair_workload(3, 7, P=2000, seed=2)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    base = ReconfigConfig(epoch_slices=16, num_epochs=4, scheme="direct",
+                          scheduler="hot_slices", k_hot=0)
+    got_base = reconfigure(sched, wl, cfg, base).delivered_bytes.sum()
+    for scheduler in ("edmonds", "bvn"):
+        rcfg = ReconfigConfig(epoch_slices=16, num_epochs=4, scheme="direct",
+                              scheduler=scheduler)
+        got = reconfigure(sched, wl, cfg, rcfg).delivered_bytes.sum()
+        assert got > got_base, (scheduler, got, got_base)

@@ -1,0 +1,175 @@
+"""Golden quality tests for the device traffic-matrix schedulers
+(:mod:`repro.core.topology_jnp`) against the host networkx references
+(:func:`repro.core.topology.edmonds` — blossom;
+:func:`repro.core.topology.bvn` — Sinkhorn + Hopcroft–Karp):
+
+* exact on structured TMs (matching-shaped for edmonds, permutation-shaped
+  for bvn) — the device schedule is bit-identical to the host one;
+* >= 1/2 of the blossom matching weight on random TMs (the greedy
+  guarantee), with a feasible, symmetric matching;
+* BvN slices are always feasible partial permutations and the whole
+  pipeline is jittable (it runs inside reconfigure's epoch scan).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bvn, edmonds
+from repro.core.topology import deploy_topo_check
+from repro.core import topology_jnp
+
+
+def _matching_weight(peer: np.ndarray, sym: np.ndarray) -> float:
+    """Total symmetrized demand served by a matching (each pair once)."""
+    w = 0.0
+    for i in range(peer.shape[0]):
+        j = int(peer[i])
+        if j >= 0 and i < j:
+            w += float(sym[i, j])
+    return w
+
+
+def _matching_tm(rng, n):
+    """A TM whose symmetrized support is itself a perfect matching — the
+    structured case where greedy and blossom must agree exactly."""
+    perm = rng.permutation(n)
+    pairs = perm.reshape(-1, 2)
+    tm = np.zeros((n, n))
+    for a, b in pairs:
+        tm[a, b] = rng.random() * 90 + 10
+    return tm
+
+
+def _derangement(rng, n):
+    while True:
+        p = rng.permutation(n)
+        if not np.any(p == np.arange(n)):
+            return p
+
+
+# ---------------------------------------------------------------------------
+# edmonds (greedy matching) vs host blossom
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n", [6, 8, 12])
+def test_edmonds_exact_on_matching_tms(seed, n):
+    tm = _matching_tm(np.random.default_rng(seed), n)
+    host = edmonds(tm)
+    dev = np.asarray(topology_jnp.edmonds_conn(jnp.asarray(tm)))
+    np.testing.assert_array_equal(host.conn, dev)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_edmonds_half_optimal_on_random_tms(seed):
+    rng = np.random.default_rng(seed + 50)
+    n = int(rng.integers(6, 14))
+    tm = rng.random((n, n)) * 100
+    np.fill_diagonal(tm, 0)
+    sym = tm + tm.T
+    host_peer = edmonds(tm).conn[0, :, 0]
+    dev_peer = np.asarray(topology_jnp.edmonds_conn(jnp.asarray(tm)))[0, :, 0]
+    w_host = _matching_weight(host_peer, sym)
+    w_dev = _matching_weight(dev_peer, sym)
+    assert w_dev >= 0.5 * w_host - 1e-6, (w_dev, w_host)
+    # a valid symmetric matching without self-circuits
+    for i in range(n):
+        j = int(dev_peer[i])
+        if j >= 0:
+            assert j != i and dev_peer[j] == i
+
+
+def test_edmonds_multi_uplink_serves_remaining_demand():
+    """Uplink k+1 must match on the demand left over by uplink k (pairs
+    already matched carry zero weight), like the host version."""
+    rng = np.random.default_rng(3)
+    n = 8
+    tm = rng.random((n, n)) * 100
+    np.fill_diagonal(tm, 0)
+    conn = np.asarray(topology_jnp.edmonds_conn(jnp.asarray(tm), n_uplinks=2))
+    assert conn.shape == (1, n, 2)
+    for i in range(n):
+        a, b = int(conn[0, i, 0]), int(conn[0, i, 1])
+        if a >= 0 and b >= 0:
+            assert a != b  # the second uplink never repeats the first pair
+    assert deploy_topo_check(conn)
+
+
+def test_edmonds_empty_tm_is_dark():
+    conn = np.asarray(topology_jnp.edmonds_conn(jnp.zeros((6, 6))))
+    assert (conn == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# bvn (Sinkhorn + greedy peeling) vs host Hopcroft–Karp decomposition
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n", [6, 8, 10])
+def test_bvn_exact_on_permutation_tms(seed, n):
+    """A (derangement) permutation TM decomposes into exactly that
+    permutation: every slice of both schedules carries it, bit-identically
+    (host max_perms doubles as its slice count)."""
+    rng = np.random.default_rng(seed + 10)
+    perm = _derangement(rng, n)
+    tm = np.zeros((n, n))
+    tm[np.arange(n), perm] = rng.random(n) * 9 + 1
+    host = bvn(tm, max_perms=16)
+    dev = np.asarray(topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=16,
+                                           max_perms=8))
+    np.testing.assert_array_equal(host.conn, dev)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_bvn_slices_are_feasible_partial_permutations(seed):
+    rng = np.random.default_rng(seed + 30)
+    n = int(rng.integers(5, 12))
+    tm = rng.random((n, n)) * 50
+    np.fill_diagonal(tm, 0)
+    conn = np.asarray(topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=12,
+                                            max_perms=6))
+    assert conn.shape == (12, n, 1)
+    assert deploy_topo_check(conn)
+    for t in range(conn.shape[0]):
+        p = conn[t, :, 0]
+        live = p[p >= 0]
+        assert len(set(live.tolist())) == live.size  # distinct receivers
+
+
+def test_bvn_covers_heavy_demand():
+    """The dominant pair of a skewed TM must get circuit slices."""
+    n = 6
+    tm = np.ones((n, n)) * 0.1
+    np.fill_diagonal(tm, 0)
+    tm[1, 4] = 100.0
+    conn = np.asarray(topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=8,
+                                            max_perms=4))
+    assert (conn[:, 1, 0] == 4).any()
+
+
+def test_schedulers_are_jittable():
+    """Both schedulers must trace under jit (they run inside reconfigure's
+    epoch scan) and produce the same results as their eager calls."""
+    rng = np.random.default_rng(0)
+    tm = jnp.asarray(rng.random((8, 8)) * 10)
+    e_j = jax.jit(lambda m: topology_jnp.edmonds_conn(m, n_uplinks=2))
+    np.testing.assert_array_equal(
+        np.asarray(e_j(tm)),
+        np.asarray(topology_jnp.edmonds_conn(tm, n_uplinks=2)))
+    b_j = jax.jit(lambda m: topology_jnp.bvn_conn(m, num_slices=6,
+                                                  max_perms=4))
+    np.testing.assert_array_equal(
+        np.asarray(b_j(tm)),
+        np.asarray(topology_jnp.bvn_conn(tm, num_slices=6, max_perms=4)))
+
+
+def test_sinkhorn_normalizes():
+    rng = np.random.default_rng(1)
+    tm = rng.random((7, 7)) * 100
+    m = np.asarray(topology_jnp.sinkhorn(jnp.asarray(tm)))
+    assert np.allclose(m.sum(axis=0), 1.0, atol=1e-3)
+    assert np.allclose(m.sum(axis=1), 1.0, atol=1e-3)
+    assert np.allclose(np.diag(m), 0.0)
