@@ -1,0 +1,113 @@
+"""Failover sweep (repro.core.failures): recovery time + FCT under failure
+for the three resilience modes — oblivious tables, local fast reroute, and
+the self-healing reconfiguration loop.
+
+Scenario: a RotorNet cycle carrying uniform background traffic plus one hot
+pair, whose direct circuit flaps dark permanently mid-run. The oblivious
+fabric keeps riding the dead entry (hot-pair packets re-enqueue every
+cycle), fast reroute patches a detour at detection time, and the
+self-healing loop recompiles clean routes at the next epoch boundary.
+
+Tracked rows (``--json`` writes ``BENCH_fig_failover.json``):
+
+* ``failover_degraded[v]``   — post-fault slices with windowed delivery
+                               below 80% of the healthy run's (recovery-
+                               time proxy; us = simulate wall time)
+* ``failover_delivered[v]``  — delivered packet fraction (the hot pair is
+                               offered ~1.2x its direct circuit, so losing
+                               it shows up here, not only in latency)
+* ``failover_lat_p99[v]``    — p99 packet latency (us) of delivered
+                               packets under failure
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FabricConfig, FabricTables, FailureTrace,
+                        ReconfigConfig, Workload, compile_masks, fast_reroute,
+                        hoho, reconfigure, round_robin, simulate,
+                        simulate_phased)
+from .common import slice_bytes, timed
+
+N, SLICE_US = 8, 10.0
+EPOCH_SLICES = 15
+HOT = (2, 5)
+
+
+def _workload(S, sb, seed=0):
+    """Uniform background + one pair hot enough to saturate its direct
+    circuit (~1.2x one circuit's capacity over the injection window), so
+    losing that circuit visibly bites."""
+    rng = np.random.default_rng(seed)
+    cell = 1500
+    t_hi = int(S * 0.7)
+    P_hot = int(1.2 * t_hi * sb / cell)
+    P_bg = P_hot // 3
+    src = rng.integers(0, N, P_bg)
+    dst = rng.integers(0, N, P_bg)
+    dst = np.where(dst == src, (src + 1) % N, dst)
+    src = np.concatenate([src, np.full(P_hot, HOT[0])])
+    dst = np.concatenate([dst, np.full(P_hot, HOT[1])])
+    P = P_bg + P_hot
+    return Workload(
+        src=src.astype(np.int32), dst=dst.astype(np.int32),
+        size=np.full(P, cell, np.int32),
+        t_inject=rng.integers(0, t_hi, P).astype(np.int32),
+        flow=(np.arange(P, dtype=np.int32) % 128),
+        seq=np.arange(P, dtype=np.int32) // 128,
+        is_eleph=np.zeros(P, bool))
+
+
+def _degraded_slices(delivered, healthy, t_fail, window=10):
+    """Post-fault slices with windowed delivery < 80% of the healthy run's,
+    restricted to slices where the healthy run still carries meaningful
+    traffic (ignores the common drain-out tail) — the recovery-time proxy."""
+    k = np.ones(window) / window
+    ma = np.convolve(delivered.astype(np.float64), k, mode="same")
+    ref = np.convolve(healthy.astype(np.float64), k, mode="same")
+    meaningful = ref >= 0.25 * ref.max()
+    sel = meaningful & (np.arange(ref.size) >= t_fail)
+    return int(np.sum(ma[sel] < 0.8 * ref[sel]))
+
+
+def run(quick: bool = False):
+    epochs = 6 if quick else 10
+    S = epochs * EPOCH_SLICES
+    sb = slice_bytes(SLICE_US)
+    sched = round_robin(N, 1, slice_us=SLICE_US)
+    cfg = FabricConfig(slice_bytes=sb)
+    wl = _workload(S, sb)
+    t_fail = S // 3
+    # the hot pair's direct circuit flaps dark, permanently
+    trace = FailureTrace().link_flap(HOT[0], HOT[1], t_fail)
+    masks = compile_masks(trace, sched, S)
+    routing = hoho(sched)
+    tables = FabricTables.build(sched, routing)
+
+    healthy, _ = timed(simulate, tables, wl, cfg, S)
+    variants = {}
+    variants["oblivious"] = timed(simulate, tables, wl, cfg, S, masks)
+    # fast reroute patches the tables at the instant of detection (t_fail);
+    # simulate_phased carries the packet state across the hot swap
+    frr = fast_reroute(routing, sched, masks.failed_links(t_fail))
+    variants["frr"] = timed(
+        simulate_phased, sched, [(routing, t_fail), (frr, S - t_fail)],
+        wl, cfg, masks)
+    if not quick:
+        rcfg = ReconfigConfig(epoch_slices=EPOCH_SLICES, num_epochs=epochs,
+                              scheme="hoho", k_hot=0, heal=True)
+        variants["heal"] = timed(reconfigure, sched, wl, cfg, rcfg, masks)
+
+    rows = []
+    for name, (res, us) in variants.items():
+        deg = _degraded_slices(res.delivered_bytes, healthy.delivered_bytes,
+                               t_fail)
+        done = res.t_deliver >= 0
+        lat = (res.t_deliver[done] - np.asarray(wl.t_inject)[done] + 1) \
+            * SLICE_US
+        p99 = float(np.percentile(lat, 99)) if len(lat) else float("nan")
+        rows.append((f"failover_degraded[{name}]", us, f"{deg}slices"))
+        rows.append((f"failover_delivered[{name}]", us,
+                     f"{float(done.mean()):.3f}"))
+        rows.append((f"failover_lat_p99[{name}]", us, f"{p99:.1f}us"))
+    return rows

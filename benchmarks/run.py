@@ -16,6 +16,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 MODULES = [
     "fig8_fct",
     "fig9_transport",
+    "fig_failover",
     "fig10_slice_duration",
     "fig12_eqo",
     "fig13_udp_rtt",

@@ -1,0 +1,109 @@
+"""Failure injection and self-healing reconfiguration, end to end
+(repro.core.failures; docs/api/core.failures.md).
+
+One continuous workload over a RotorNet cycle, three fabrics:
+
+* oblivious  — the deployed tables never change; packets whose entries
+               ride failed circuits miss their slice every slice until the
+               fault clears (paper §5.2 congestion detection keeps
+               re-looking them up, so they recover the moment it does);
+* fast-reroute — the tables are patched around the failure with the
+               precomputed backup next hops (no recompile): surviving
+               multipath slots are compacted, orphaned cells get a one-hop
+               detour via the earliest surviving circuit;
+* self-heal  — the jitted reconfiguration loop detects the failure set at
+               each epoch boundary and recompiles the time-flow tables
+               over the surviving adjacency, entirely on-device.
+
+The fault trace: ToR 5 goes down mid-run and comes back, and the 2 -> 9
+circuit flaps dark for the second half. Watch the per-epoch delivery rate
+dip at the outage and recover — immediately at the heal for the oblivious
+fabric, one epoch after detection for the self-healing one.
+
+    PYTHONPATH=src python examples/failure_recovery.py
+"""
+import numpy as np
+
+from repro.core import (FabricConfig, FabricTables, FailureTrace,
+                        ReconfigConfig, Workload, compile_masks, fast_reroute,
+                        hoho, reconfigure, round_robin, simulate,
+                        simulate_phased)
+
+N_TORS, SLICE_US = 16, 10.0
+SLICE_BYTES = int(100 / 8 * 1e3 * SLICE_US)     # 100 Gbps circuits
+EPOCHS, EPOCH_SLICES = 8, 15
+S = EPOCHS * EPOCH_SLICES
+
+OUTAGE = (30, 75)        # ToR 5 down for these slices
+FLAP_AT = 60             # 2 -> 9 circuit dark from here on
+
+# -- continuous all-to-all workload ----------------------------------------
+rng = np.random.default_rng(0)
+P = 6000
+src = rng.integers(0, N_TORS, P)
+dst = rng.integers(0, N_TORS, P)
+dst = np.where(dst == src, (src + 1) % N_TORS, dst)
+wl = Workload(
+    src=src.astype(np.int32), dst=dst.astype(np.int32),
+    size=np.full(P, 1000, np.int32),
+    t_inject=rng.integers(0, S - 20, P).astype(np.int32),
+    flow=(np.arange(P, dtype=np.int32) % 256),
+    seq=np.arange(P, dtype=np.int32) // 256,
+    is_eleph=np.zeros(P, bool),
+)
+
+sched = round_robin(N_TORS, 1, slice_us=SLICE_US)
+cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+
+trace = (FailureTrace()
+         .tor_outage(5, *OUTAGE)
+         .link_flap(2, 9, FLAP_AT))
+masks = compile_masks(trace, sched, S)
+
+routing = hoho(sched)
+tables = FabricTables.build(sched, routing)
+
+
+def per_epoch(delivered_bytes):
+    return delivered_bytes.reshape(EPOCHS, EPOCH_SLICES).sum(axis=1) // 1000
+
+
+runs = {}
+# oblivious: static tables under the fault trace
+res = simulate(tables, wl, cfg, S, failures=masks)
+runs["oblivious"] = res
+
+# fast-reroute: at each detection instant the tables are patched around
+# the *current* failure snapshot (no recompile, best-effort) — once when
+# ToR 5 dies, again when the 2 -> 9 flap hits; the packet state is
+# carried across each hot swap
+frr_outage = fast_reroute(routing, sched, masks.failed_links(OUTAGE[0]))
+frr_both = fast_reroute(routing, sched, masks.failed_links(FLAP_AT))
+res = simulate_phased(sched, [(routing, OUTAGE[0]),
+                              (frr_outage, FLAP_AT - OUTAGE[0]),
+                              (frr_both, S - FLAP_AT)],
+                      wl, cfg, failures=masks)
+runs["fast-reroute"] = res
+
+# self-heal: detect -> repair -> hot-swap at every epoch boundary, on-device
+rcfg = ReconfigConfig(epoch_slices=EPOCH_SLICES, num_epochs=EPOCHS,
+                      scheme="hoho", k_hot=0, heal=True)
+res = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+runs["self-heal"] = res
+
+print(f"{N_TORS} ToRs, {P} packets, {EPOCHS} epochs x {EPOCH_SLICES} slices; "
+      f"ToR 5 down @[{OUTAGE[0]},{OUTAGE[1]}), link 2->9 dark @{FLAP_AT}+\n")
+print(f"{'fabric':14} {'delivered':>10}  per-epoch delivered KB")
+for label, res in runs.items():
+    done = (res.t_deliver >= 0).mean()
+    print(f"{label:14} {done:>9.1%}  {per_epoch(res.delivered_bytes)}")
+
+hl = runs["self-heal"]
+print(f"\nself-heal failed-link detections per epoch: {hl.failed_links}")
+print("""
+Reading the table: every fabric dips when ToR 5 dies (its own traffic has
+nowhere to go) and recovers when it returns. The oblivious fabric also
+bleeds on the flapped 2->9 circuit until the end of the run; fast reroute
+patches around it instantly at the cost of detour capacity; the
+self-healing loop recompiles clean multi-hop routes one epoch after each
+detection and holds the best post-outage delivery rate.""")

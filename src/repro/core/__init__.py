@@ -1,10 +1,12 @@
 """OpenOptics core: the paper's contribution in JAX.
 
 Control plane (numpy/networkx, host-side — the paper's optical controller):
-  topology (schedules), routing (time-flow table compilation), net (user API).
+  topology (schedules), routing (time-flow table compilation), net (user API),
+  failures (fault traces, table repair, fast reroute).
 Data plane (JAX, jit-able — the paper's P4 switch system):
-  fabric (calendar queues, congestion detection, push-back, offloading),
-  eqo (occupancy-estimation model), guardband (min-slice derivation).
+  fabric (calendar queues, congestion detection, push-back, offloading,
+  failure masks), eqo (occupancy-estimation model), guardband (min-slice
+  derivation).
 """
 from .topology import (Circuit, Schedule, connect, round_robin, edmonds, bvn,
                        jupiter, sorn, uniform_mesh, circuits_to_conn,
@@ -15,6 +17,9 @@ from .timeflow import Entry, TimeFlowTable
 from .fabric import FabricConfig, FabricTables, Workload, SimResult, simulate
 from .net import OpenOpticsNet, clos_routing
 from .reconfigure import ReconfigConfig, ReconfigResult, reconfigure
+from .failures import (FailureEvent, FailureTrace, FailureMasks,
+                       compile_masks, random_trace, repair, surviving_conn,
+                       backup_tables, fast_reroute, simulate_phased)
 from .traces import synthesize, flow_fcts, TRACES
 from .guardband import GuardbandInputs, derive as derive_guardband
 from .eqo import simulate_eqo
@@ -30,6 +35,9 @@ __all__ = [
     "FabricConfig", "FabricTables", "Workload", "SimResult", "simulate",
     "OpenOpticsNet", "clos_routing",
     "ReconfigConfig", "ReconfigResult", "reconfigure",
+    "FailureEvent", "FailureTrace", "FailureMasks", "compile_masks",
+    "random_trace", "repair", "surviving_conn", "backup_tables",
+    "fast_reroute", "simulate_phased",
     "synthesize", "flow_fcts", "TRACES",
     "GuardbandInputs", "derive_guardband",
     "simulate_eqo", "toolkit",

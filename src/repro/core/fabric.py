@@ -107,6 +107,12 @@ class FabricConfig:
         default), "pallas" (TPU kernel), "pallas-interpret" (kernel body on
         CPU for validation). All three are bit-identical; see
         :mod:`repro.kernels.time_flow_lookup`.
+
+    Failure state is *data*, not static config: per-slice fault masks
+    (:class:`repro.core.failures.FailureMasks`) enter through
+    :func:`simulate`'s ``failures`` argument and are threaded through the
+    jitted step; the step only branches on their presence, so failure-free
+    runs trace the exact pre-failure program.
     """
 
     slice_bytes: int = 75_000        # 100 Gbps x 6 us, per circuit per slice
@@ -330,7 +336,7 @@ def _build_caps_all(conn, cfg: FabricConfig, N: int):
 
 
 def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
-             num_slices: int) -> SimResult:
+             num_slices: int, failures=None) -> SimResult:
     """Run the fabric for ``num_slices`` slices.
 
     Args:
@@ -342,6 +348,13 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
             per-packet table-lookup backend ("jnp" gathers, "pallas" TPU
             kernel, "pallas-interpret" CPU validation — all bit-identical).
         num_slices: slices to run (the schedule cycle wraps as needed).
+        failures: optional :class:`repro.core.failures.FailureMasks`
+            covering the run ([num_slices, N, N] link capacities +
+            [num_slices, N] ToR liveness). Dead/degraded circuits admit
+            less (nothing, when dead), so their packets miss the slice and
+            re-enqueue through the §5.2 machinery; down ToRs neither
+            inject nor terminate electrical transfers. ``None`` (default)
+            traces exactly the failure-free program.
 
     Everything inside is jitted; re-compilation happens per (packet count,
     table shapes, config). For a loop that *recompiles the tables on-device
@@ -362,6 +375,10 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
         t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
         is_eleph=dev(wl.is_eleph, jnp.bool_),
     )
+    if failures is not None:
+        failures.validate(num_slices, N)
+        j["link_cap"] = dev(failures.link_cap, jnp.float32)
+        j["node_ok"] = dev(failures.node_ok, jnp.bool_)
     per_packet_mp = tables.multipath == "packet"
     out = _simulate_jit(j, cfg, num_slices, per_packet_mp,
                         int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1)
@@ -410,6 +427,44 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
     caps_all = _build_caps_all(j["conn"], cfg, N)          # [T, NKEY]
 
+    # Failure masks (repro.core.failures): when present, per-slice circuit
+    # capacities are recomputed under the mask (a dead link admits nothing,
+    # so its packets miss the slice and re-enqueue via the §5.2 machinery;
+    # a degraded transceiver admits a fraction), down ToRs stop injecting,
+    # and electrical transfers to a down destination are held back. With no
+    # masks every branch below folds away and the traced program is exactly
+    # the failure-free one (zero-failure bit-identity).
+    has_fail = "link_cap" in j
+
+    def caps_at(t):
+        if not has_fail:
+            return caps_all[t % T]
+        # The masked capacities are recomputed per step rather than
+        # precomputed [S, NKEY] like caps_all: reconfigure re-traces this
+        # builder every epoch with a different conn, so a full-run
+        # precompute would redo all S slices per epoch while each epoch
+        # only runs epoch_slices of them. The U scatter-adds here are tiny
+        # next to the per-slice packet phases; equivalence with
+        # _build_caps_all on healthy masks is pinned by the zero-failure
+        # parity tests.
+        lc = j["link_cap"][t]                              # [N, N]
+        rows = jnp.arange(N, dtype=jnp.int32)
+        caps = jnp.zeros((NKEY,), jnp.int32)
+        for k in range(U):
+            peer = j["conn"][t % T, :, k]
+            okp = peer >= 0
+            keyk = rows * (N + 1) + jnp.where(okp, peer, N)
+            lck = lc[rows, jnp.clip(peer, 0, N - 1)]
+            # healthy (1.0) and dead (0.0) links stay exact integers; the
+            # float product only prices genuinely degraded transceivers
+            scaled = jnp.where(
+                lck >= 1.0, jnp.int32(cfg.slice_bytes),
+                jnp.where(lck <= 0.0, 0,
+                          (cfg.slice_bytes * lck).astype(jnp.int32)))
+            caps = caps.at[keyk].add(jnp.where(okp, scaled, 0))
+        return caps.at[rows * (N + 1) + N].add(
+            jnp.where(j["node_ok"][t], jnp.int32(cfg.elec_bytes), 0))
+
     # Stacked (injection, transit) tables for the fused first-phase lookup.
     # K is padded to the common max with invalid slots: the valid-slot count
     # (and therefore the hash slot choice) is unchanged.
@@ -433,7 +488,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     def step(state, t):
         s = dict(state)
         h = mp_hash(t)
-        caps = caps_all[t % T]
+        caps = caps_at(t)
 
         def vbucket(v, dep_abs):
             return jnp.clip(v["loc"], 0, N - 1) * T2 + dep_abs % T2
@@ -502,6 +557,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
         # -- 1+2. injection & re-lookup of deferred packets (fused lookup) ---
         ready = (j["t_inject"] <= t) & (s["loc"] == NOT_INJECTED)
+        if has_fail:
+            # a down ToR's hosts cannot inject; the packets simply retry
+            # next slice (loc stays NOT_INJECTED)
+            ready &= j["node_ok"][t, j["src"]]
         redo = s["relook"] & (s["loc"] >= 0) & (s["dep"] == t)
 
         def inj_redo_logic(s, v):
@@ -586,6 +645,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
         def hop_logic(s, v, used, buf_now, backlog_min):
             want = v["active"]
+            if has_fail:
+                # the electrical fabric cannot terminate at a down ToR;
+                # dead optical circuits are already capacity-zero
+                want &= ~((v["nxt"] == N) & ~j["node_ok"][t, v["dst"]])
             if cfg.pushback:
                 # push-back rejects at the *sender*: no transmission into a
                 # full downstream switch (paper §5.2); rejected packets miss

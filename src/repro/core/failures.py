@@ -1,0 +1,493 @@
+"""Failure & resilience subsystem: fault models, repair, and fast reroute.
+
+Every scenario in this repro previously assumed a permanently healthy
+fabric; this module opens the failure axis (ROADMAP north star "as many
+scenarios as you can imagine", and a first-class challenge for
+fast-switched optical DCNs — Xue et al., *Optical Switching Data Center
+Networks: Understanding Techniques and Challenges*). Three layers:
+
+1. **Fault models** (:class:`FailureTrace` / :func:`random_trace`) —
+   seeded, reproducible fault event lists: link flaps, stuck OCS ports,
+   ToR outages, transceiver degradation. :func:`compile_masks` lowers a
+   trace against a schedule into dense per-slice mask tensors
+   (:class:`FailureMasks`): ``link_cap[S, N, N]`` — the capacity fraction
+   of circuit ``n -> d`` at absolute slice ``s`` (0 = dead, 1 = healthy,
+   in between = degraded transceiver) — and ``node_ok[S, N]`` for ToR
+   liveness. A ToR outage lowers into its link row *and* column plus
+   ``node_ok``; a stuck port lowers into the links its uplink would carry
+   under the schedule. The masks are plain data-plane inputs:
+   :func:`repro.core.fabric.simulate` and
+   :func:`repro.core.reconfigure.reconfigure` accept them via a
+   ``failures=`` argument and thread them through the jitted per-slice
+   step (dead links admit nothing, so packets on them miss their slice and
+   re-enqueue — congestion detection then re-looks them up, exactly the
+   paper's §5.2 machinery). With no masks the traced program is literally
+   today's, so the zero-failure data plane stays bit-identical.
+
+2. **Repair** (:func:`repair` / :func:`surviving_conn`) — scheme-agnostic
+   table recompilation over the surviving adjacency, the unified-routing
+   repair primitive (Li et al., *Unlocking Diversity of Fast-Switched
+   Optical Data Center Networks with Unified Routing*): mask the failed
+   circuits out of ``conn`` and re-run any routing compiler on what
+   survives. Available host-side (``impl="numpy"``, every TO *and* TA
+   scheme) and on-device (``impl="jnp"``, the TO schemes of
+   :mod:`repro.core.routing_jnp`) — golden-tested bit-identical against
+   each other. :func:`repro.core.reconfigure.reconfigure` runs the jnp
+   path inside its epoch scan when ``ReconfigConfig.heal`` is set: each
+   epoch *detects* the current failure set from the masks and recompiles
+   over the survivors — the self-healing measure -> detect -> repair ->
+   hot-swap loop, entirely on-device.
+
+3. **Local fast reroute** (:func:`backup_tables` / :func:`fast_reroute`)
+   — precomputed backup next hops so a failure can be patched around
+   *without* a full recompile (the microsecond-scale first response;
+   repair is the clean second response). For every (slice, node) the
+   backup list holds the earliest upcoming circuits to distinct peers;
+   :func:`fast_reroute` drops table slots that ride failed links
+   (compacting survivors so slots stay contiguous) and, where a cell
+   loses all its slots, installs a one-hop detour via the earliest
+   surviving circuit. The patched tables never cross a failed link
+   (statically checkable with
+   :func:`repro.core.toolkit.check_tables` ``link_fail=``), but detours
+   are best-effort — only :func:`repair` restores loop-free delivery.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .routing import CompiledRouting, direct, ecmp, hoho, ksp, opera, ucmp, \
+    vlb, wcmp
+from .topology import Schedule
+
+__all__ = [
+    "OPEN_END",
+    "FailureEvent",
+    "FailureTrace",
+    "FailureMasks",
+    "random_trace",
+    "compile_masks",
+    "surviving_conn",
+    "repair",
+    "backup_tables",
+    "fast_reroute",
+    "simulate_phased",
+    "REPAIR_SCHEMES",
+]
+
+# open-ended failures (no heal scheduled yet) end "never"
+OPEN_END = 1 << 30
+
+KINDS = ("link", "port", "tor", "degrade")
+
+REPAIR_SCHEMES = {
+    "direct": direct, "vlb": vlb, "opera": opera, "ucmp": ucmp, "hoho": hoho,
+    "ecmp": ecmp, "wcmp": wcmp, "ksp": ksp,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """One fault: ``kind`` in ``("link", "port", "tor", "degrade")`` active
+    over absolute slices ``[t_start, t_end)`` (``t_end == OPEN_END`` means
+    "until healed").
+
+    link: circuit ``node -> dst`` is dark (a link flap is two events or a
+        finite window).
+    port: ``node``'s OCS uplink ``uplink`` is stuck dark — the circuits it
+        would carry under the schedule never come up.
+    tor: ``node`` is down — all its circuits (both directions) are dark and
+        its hosts can neither inject nor receive.
+    degrade: transceiver degradation — circuit ``node -> dst`` keeps only a
+        ``scale`` fraction of its slice capacity.
+    """
+
+    kind: str
+    t_start: int
+    t_end: int = OPEN_END
+    node: int = -1
+    dst: int = -1
+    uplink: int = -1
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown failure kind {self.kind!r}: "
+                             f"expected one of {KINDS}")
+        if self.t_end <= self.t_start:
+            raise ValueError(f"empty failure window [{self.t_start}, "
+                             f"{self.t_end})")
+        need = {"link": ("node", "dst"), "degrade": ("node", "dst"),
+                "tor": ("node",), "port": ("node", "uplink")}[self.kind]
+        for f in need:
+            if getattr(self, f) < 0:
+                raise ValueError(
+                    f"{self.kind} failure needs {f} >= 0 "
+                    f"(got {getattr(self, f)}) — a negative index would "
+                    "silently darken the wrong circuit")
+
+
+@dataclasses.dataclass
+class FailureTrace:
+    """An ordered, reproducible list of :class:`FailureEvent`\\ s with
+    builder helpers (each returns ``self`` for chaining)."""
+
+    events: list[FailureEvent] = dataclasses.field(default_factory=list)
+
+    def link_flap(self, src: int, dst: int, t_start: int,
+                  t_end: int = OPEN_END) -> "FailureTrace":
+        self.events.append(FailureEvent("link", t_start, t_end,
+                                        node=src, dst=dst))
+        return self
+
+    def stuck_port(self, node: int, uplink: int, t_start: int,
+                   t_end: int = OPEN_END) -> "FailureTrace":
+        self.events.append(FailureEvent("port", t_start, t_end,
+                                        node=node, uplink=uplink))
+        return self
+
+    def tor_outage(self, node: int, t_start: int,
+                   t_end: int = OPEN_END) -> "FailureTrace":
+        self.events.append(FailureEvent("tor", t_start, t_end, node=node))
+        return self
+
+    def degrade(self, src: int, dst: int, scale: float, t_start: int,
+                t_end: int = OPEN_END) -> "FailureTrace":
+        if not 0.0 <= scale <= 1.0:
+            raise ValueError(f"degrade scale {scale} outside [0, 1]")
+        self.events.append(FailureEvent("degrade", t_start, t_end,
+                                        node=src, dst=dst, scale=scale))
+        return self
+
+    def heal_all(self, t: int) -> "FailureTrace":
+        """End every failure active at slice ``t`` and drop events that
+        were scheduled to start later."""
+        self.events = [dataclasses.replace(e, t_end=min(e.t_end, t))
+                       for e in self.events if e.t_start < t]
+        return self
+
+    def active_in(self, t0: int, t1: int) -> bool:
+        """Whether any event overlaps the window ``[t0, t1)`` — lets
+        callers skip mask compilation (and the fabric's failure branch)
+        for windows the trace cannot affect."""
+        return any(e.t_start < t1 and e.t_end > t0 for e in self.events)
+
+
+def random_trace(seed: int, sched: Schedule, num_slices: int,
+                 n_events: int = 4, kinds: tuple[str, ...] = KINDS,
+                 ) -> FailureTrace:
+    """A seeded, reproducible random fault trace against ``sched``:
+    ``n_events`` events of the given ``kinds`` with windows inside
+    ``[0, num_slices)`` (~half open-ended until the run's end)."""
+    rng = np.random.default_rng(seed)
+    N, U = sched.num_nodes, sched.num_uplinks
+    tr = FailureTrace()
+    for _ in range(n_events):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        t0 = int(rng.integers(0, max(num_slices - 1, 1)))
+        t1 = OPEN_END if rng.random() < 0.5 else \
+            int(rng.integers(t0 + 1, num_slices + 1))
+        if kind == "tor":
+            tr.tor_outage(int(rng.integers(N)), t0, t1)
+        elif kind == "port":
+            tr.stuck_port(int(rng.integers(N)), int(rng.integers(U)), t0, t1)
+        else:
+            s = int(rng.integers(N))
+            d = int(rng.integers(N - 1))
+            d = d + 1 if d >= s else d  # never a self-link
+            if kind == "link":
+                tr.link_flap(s, d, t0, t1)
+            else:
+                tr.degrade(s, d, float(rng.uniform(0.1, 0.9)), t0, t1)
+    return tr
+
+
+@dataclasses.dataclass
+class FailureMasks:
+    """Dense per-slice failure state, the data-plane lowering of a
+    :class:`FailureTrace` (see :func:`compile_masks`).
+
+    link_cap[s, n, d]: capacity fraction of circuit ``n -> d`` at absolute
+        slice ``s`` (float32; 0 = dead, 1 = healthy).
+    node_ok[s, n]: ToR ``n`` is up at slice ``s`` (gates host injection and
+        the electrical egress; a down ToR's links are also zeroed in
+        ``link_cap``).
+    """
+
+    link_cap: np.ndarray   # [S, N, N] float32
+    node_ok: np.ndarray    # [S, N] bool
+
+    @property
+    def num_slices(self) -> int:
+        return int(self.link_cap.shape[0])
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.link_cap.shape[1])
+
+    @classmethod
+    def healthy(cls, num_slices: int, n_nodes: int) -> "FailureMasks":
+        return cls(np.ones((num_slices, n_nodes, n_nodes), np.float32),
+                   np.ones((num_slices, n_nodes), bool))
+
+    def validate(self, num_slices: int, n_nodes: int) -> None:
+        if self.link_cap.shape != (num_slices, n_nodes, n_nodes) or \
+                self.node_ok.shape != (num_slices, n_nodes):
+            raise ValueError(
+                f"failure masks shaped {self.link_cap.shape}/"
+                f"{self.node_ok.shape} do not cover the run "
+                f"([{num_slices}, {n_nodes}, {n_nodes}] / "
+                f"[{num_slices}, {n_nodes}])")
+
+    def failed_links(self, t: int) -> np.ndarray:
+        """``[N, N]`` bool: circuits dead at absolute slice ``t`` — the
+        snapshot :func:`repair`, :func:`fast_reroute`, and
+        :func:`repro.core.toolkit.check_tables` consume."""
+        return np.asarray(self.link_cap[t] <= 0.0)
+
+
+def compile_masks(trace: FailureTrace, sched: Schedule, num_slices: int,
+                  t0: int = 0) -> FailureMasks:
+    """Lower a fault trace into :class:`FailureMasks` covering absolute
+    slices ``[t0, t0 + num_slices)`` of ``sched`` (``t0`` lets
+    :meth:`repro.core.net.OpenOpticsNet.run` compile the window that starts
+    at its running clock).
+
+    Events compose: overlapping degradations multiply, any dead source
+    (link / port / ToR) wins over degradation. Stuck ports are resolved
+    against the schedule as the fabric will run it — the fabric's scan
+    index restarts at 0 every :func:`repro.core.fabric.simulate` call, so
+    the circuit darkened at window slice ``s`` is ``n -> conn[s % T, n,
+    u]`` regardless of ``t0`` (``t0`` only shifts which *events* fall in
+    the window).
+    """
+    T, N, U = sched.conn.shape
+    S = num_slices
+    m = FailureMasks.healthy(S, N)
+    for e in trace.events:
+        if e.node >= N or e.dst >= N or (e.kind == "port" and e.uplink >= U):
+            raise ValueError(
+                f"{e.kind} failure indexes outside the schedule "
+                f"(node={e.node}, dst={e.dst}, uplink={e.uplink}; "
+                f"N={N}, U={U})")
+        a = max(e.t_start - t0, 0)
+        b = min(e.t_end - t0, S)
+        if b <= a:
+            continue
+        w = slice(a, b)
+        if e.kind == "link":
+            m.link_cap[w, e.node, e.dst] = 0.0
+        elif e.kind == "degrade":
+            m.link_cap[w, e.node, e.dst] *= e.scale
+        elif e.kind == "tor":
+            m.link_cap[w, e.node, :] = 0.0
+            m.link_cap[w, :, e.node] = 0.0
+            m.node_ok[w, e.node] = False
+        else:  # port: darken the links the stuck uplink would carry
+            ts = np.arange(a, b)
+            peer = sched.conn[ts % T, e.node, e.uplink]
+            ok = peer >= 0
+            m.link_cap[ts[ok], e.node, peer[ok]] = 0.0
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Repair: scheme-agnostic recompilation over the surviving adjacency
+# ---------------------------------------------------------------------------
+
+
+def surviving_conn(conn: np.ndarray, failed: np.ndarray) -> np.ndarray:
+    """Mask the failed circuits out of a schedule tensor: ``conn[t, n, u]``
+    goes dark wherever ``failed[n, peer]``. Works on numpy and jnp inputs
+    (pure ``where``/gather, so it also runs inside the jitted
+    reconfiguration epoch)."""
+    N = conn.shape[1]
+    if isinstance(conn, np.ndarray):
+        xp = np
+    else:
+        import jax.numpy as xp
+    rows = xp.arange(N)[None, :, None]
+    peer = xp.clip(conn, 0, N - 1)
+    dead = (conn >= 0) & xp.asarray(failed)[rows, peer]
+    return xp.where(dead, -1, conn)
+
+
+def repair(sched: Schedule, scheme: str, failed: np.ndarray,
+           impl: str = "numpy", **kw) -> CompiledRouting:
+    """Recompile ``scheme``'s time-flow tables over the surviving adjacency
+    — the scheme-agnostic repair primitive. ``failed[n, d]`` marks dead
+    circuits (e.g. :meth:`FailureMasks.failed_links`); ``kw`` is forwarded
+    to the scheme compiler (``max_hop``, ``kpaths``, ...).
+
+    ``impl="numpy"`` runs the host reference compiler (every TO and TA
+    scheme); ``impl="jnp"`` the device compiler of
+    :mod:`repro.core.routing_jnp` (TO schemes), bit-identical to the host
+    path (golden-tested). The repaired tables never reference a failed
+    link, which :func:`repro.core.toolkit.check_tables` can prove with its
+    ``link_fail=`` argument.
+    """
+    if scheme not in REPAIR_SCHEMES:
+        raise ValueError(f"unknown scheme {scheme!r}: expected one of "
+                         f"{tuple(REPAIR_SCHEMES)}")
+    alive_sched = Schedule(np.asarray(surviving_conn(sched.conn, failed)),
+                           slice_us=sched.slice_us, reconf_us=sched.reconf_us)
+    if impl == "numpy":
+        return REPAIR_SCHEMES[scheme](alive_sched, **kw)
+    if impl != "jnp":
+        raise ValueError(f"unknown impl {impl!r}: expected 'numpy' or 'jnp'")
+    from . import routing_jnp
+    if scheme not in routing_jnp.SCHEMES:
+        raise ValueError(f"impl='jnp' supports the TO schemes "
+                         f"{routing_jnp.SCHEMES}; {scheme!r} is host-only")
+    return REPAIR_SCHEMES[scheme](alive_sched, compile_impl="jnp", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Local fast reroute: precomputed backups, patched without a recompile
+# ---------------------------------------------------------------------------
+
+
+def backup_tables(sched: Schedule, max_cands: int = 8):
+    """Precompute backup next-hop candidates: for every (slice, node) the
+    earliest upcoming circuits to up to ``max_cands`` distinct peers,
+    ordered by wait offset. Returns ``(bk_next[T, N, C], bk_off[T, N, C])``
+    int32 (-1 padding). Computed once per deploy so a failure can be
+    patched with :func:`fast_reroute` in microseconds, not a recompile.
+    """
+    from .routing import first_direct_offsets
+    fd = first_direct_offsets(sched).astype(np.int64)    # [T, N, N]
+    T, N, _ = fd.shape
+    C = min(max_cands, N - 1)
+    NEVER = np.int64(1) << 30
+    diag = np.arange(N)
+    key = np.where(fd >= 0, fd, NEVER)
+    key[:, diag, diag] = NEVER                           # never detour to self
+    order = np.argsort(key, axis=2, kind="stable")[:, :, :C]   # peers by wait
+    off = np.take_along_axis(key, order, axis=2)
+    found = off < NEVER
+    bk_next = np.where(found, order, -1).astype(np.int32)
+    bk_off = np.where(found, off, 0).astype(np.int32)
+    return bk_next, bk_off
+
+
+def fast_reroute(routing: CompiledRouting, sched: Schedule,
+                 failed: np.ndarray, backups=None) -> CompiledRouting:
+    """Patch compiled tables around a failure set without recompiling.
+
+    Per table cell (slice, node, dst): slots whose egress rides a failed
+    link are dropped and the survivors compacted to the front (slot
+    contiguity, which the fabric's hash-over-valid-count requires, is
+    preserved). A cell that loses *all* its slots gets a one-hop detour:
+    the earliest surviving circuit from the node (``backups``, default
+    :func:`backup_tables`), after which the transit tables take over.
+
+    The patched tables never cross a failed link at any hop (provable with
+    ``check_tables(..., link_fail=failed, check_walks=False)``), but
+    detours are best-effort: they can lengthen paths or loop under further
+    failures. :func:`repair` is the full recompile that restores loop-free
+    delivery; fast reroute is the instant first response.
+    """
+    T = sched.num_slices
+    N = sched.num_nodes
+    if routing.num_slices != T:
+        raise ValueError(
+            f"fast_reroute needs the table cycle ({routing.num_slices}) to "
+            f"match the schedule cycle ({T}) so detour offsets are "
+            "expressible per arrival slice")
+    if backups is None:
+        backups = backup_tables(sched)
+    bk_next, bk_off = backups
+    out_n, out_d = [], []
+    for nxt, dep in ((routing.tf_next, routing.tf_dep),
+                     (routing.inj_next, routing.inj_dep)):
+        valid = nxt >= 0
+        optical = valid & (nxt < N)
+        node_idx = np.arange(N)[None, :, None, None]
+        dead = optical & failed[node_idx, np.clip(nxt, 0, N - 1)]
+        ok = valid & ~dead
+        # compact surviving slots to the front, preserving slot order
+        order = np.argsort(~ok, axis=-1, kind="stable")
+        new_n = np.take_along_axis(nxt, order, axis=-1)
+        new_d = np.take_along_axis(dep, order, axis=-1)
+        ok_s = np.take_along_axis(ok, order, axis=-1)
+        new_n = np.where(ok_s, new_n, -1)
+        new_d = np.where(ok_s, new_d, 0)
+        # cells that had entries but lost them all: detour via the earliest
+        # surviving circuit (lands at a live peer; transit tables continue)
+        need = valid.any(-1) & ~ok.any(-1)               # [Tr, N, D]
+        if need.any():
+            t_i, n_i, d_i = np.nonzero(need)
+            cn = bk_next[t_i % T, n_i]                   # [M, C]
+            co = bk_off[t_i % T, n_i]
+            alive = (cn >= 0) & ~failed[n_i[:, None], np.clip(cn, 0, N - 1)]
+            pick = np.argmax(alive, axis=1)
+            has = alive.any(axis=1)
+            mrow = np.arange(t_i.size)
+            new_n[t_i, n_i, d_i, 0] = np.where(has, cn[mrow, pick], -1)
+            new_d[t_i, n_i, d_i, 0] = np.where(has, co[mrow, pick], 0)
+        out_n.append(new_n.astype(np.int32))
+        out_d.append(new_d.astype(np.int32))
+    return CompiledRouting(out_n[0], out_d[0], out_n[1], out_d[1],
+                           multipath=routing.multipath, lookup=routing.lookup,
+                           weights=routing.weights)
+
+
+def simulate_phased(sched: Schedule, phases, wl, cfg, failures=None):
+    """Run the fabric through consecutive phases with different deployed
+    tables, carrying the packet state across each swap — the host-driven
+    analogue of :func:`repro.core.reconfigure.reconfigure`'s on-device hot
+    swap, for scenarios where the table change is computed on the host
+    (e.g. a :func:`fast_reroute` patch at failure detection, then a
+    :func:`repair` recompile).
+
+    ``phases`` is a list of ``(routing, num_slices)``; slices are absolute
+    and consecutive, so ``failures`` masks (covering the total) line up.
+    With a single phase the result is bit-identical to
+    :func:`repro.core.fabric.simulate`.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from .fabric import FabricTables, SimResult, _init_state, _make_step
+
+    total = sum(s for _, s in phases)
+    N = sched.num_nodes
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    base = dict(
+        src=dev(wl.src), dst=dev(wl.dst), size=dev(wl.size),
+        t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
+        is_eleph=dev(wl.is_eleph, jnp.bool_),
+    )
+    if failures is not None:
+        failures.validate(total, N)
+        base["link_cap"] = dev(failures.link_cap, jnp.float32)
+        base["node_ok"] = dev(failures.node_ok, jnp.bool_)
+    num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
+    state = None
+    stats = []
+    t0 = 0
+    for routing, n_slices in phases:
+        tables = FabricTables.build(sched, routing)
+        j = dict(base, conn=dev(tables.conn),
+                 tf_next=dev(tables.tf_next), tf_dep=dev(tables.tf_dep),
+                 inj_next=dev(tables.inj_next), inj_dep=dev(tables.inj_dep),
+                 first_direct=dev(tables.first_direct))
+        if state is None:
+            state = _init_state(j, num_flows)
+        step = _make_step(j, cfg, tables.multipath == "packet", num_flows)
+        state, ys = jax.lax.scan(
+            step, state, t0 + jnp.arange(n_slices, dtype=jnp.int32))
+        stats.append(ys)
+        t0 += n_slices
+    merged = {k: np.concatenate([np.asarray(s[k]) for s in stats])
+              for k in stats[0]}
+    return SimResult(
+        t_deliver=np.asarray(state["t_del"]),
+        loc_final=np.asarray(state["loc"]),
+        nhops=np.asarray(state["nhops"]),
+        delivered_bytes=merged["delivered_bytes"],
+        dropped=merged["dropped"],
+        buf_bytes=merged["buf_bytes"], offl_bytes=merged["offl_bytes"],
+        blocked_inj=merged["blocked_inj"], slice_miss=merged["slice_miss"],
+        reorder_cnt=np.asarray(state["reorder"]))

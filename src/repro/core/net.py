@@ -25,6 +25,7 @@ import numpy as np
 
 from . import routing as routing_mod
 from .fabric import FabricConfig, FabricTables, SimResult, Workload, simulate
+from .failures import FailureTrace, compile_masks
 from .routing import CompiledRouting
 from .topology import Schedule, deploy_topo_check
 
@@ -55,6 +56,7 @@ class OpenOpticsNet:
         self._last_result: SimResult | None = None
         self._last_workload: Workload | None = None
         self._clock = 0  # slices elapsed across run() windows
+        self.failure_trace = FailureTrace()
 
     # -- Topology APIs ------------------------------------------------------
     def deploy_topo(self, sched: Schedule) -> bool:
@@ -83,6 +85,39 @@ class OpenOpticsNet:
         assert self.routing is not None
         return routing_mod.add_entry(self.routing, node, dst, egress, arr_ts, dep_ts)
 
+    # -- Failure APIs (repro.core.failures) ----------------------------------
+    def inject_failure(self, kind: str, *, node: int = -1, dst: int = -1,
+                       uplink: int = 0, t_start: int | None = None,
+                       t_end: int | None = None, scale: float = 0.5) -> bool:
+        """Inject a fault into the fabric (Table-1 API style). ``kind`` is
+        one of ``"link"`` (circuit ``node -> dst`` dark), ``"port"``
+        (``node``'s OCS ``uplink`` stuck), ``"tor"`` (``node`` down), or
+        ``"degrade"`` (circuit ``node -> dst`` keeps a ``scale`` capacity
+        fraction). ``t_start`` defaults to the net's current clock and
+        ``t_end`` to open-ended (until :meth:`heal`). Subsequent
+        :meth:`run` windows simulate under the accumulated fault trace.
+        """
+        from .failures import OPEN_END
+        t0 = self._clock if t_start is None else t_start
+        t1 = OPEN_END if t_end is None else t_end
+        if kind == "link":
+            self.failure_trace.link_flap(node, dst, t0, t1)
+        elif kind == "port":
+            self.failure_trace.stuck_port(node, uplink, t0, t1)
+        elif kind == "tor":
+            self.failure_trace.tor_outage(node, t0, t1)
+        elif kind == "degrade":
+            self.failure_trace.degrade(node, dst, scale, t0, t1)
+        else:
+            raise ValueError(f"unknown failure kind {kind!r}")
+        return True
+
+    def heal(self, t: int | None = None) -> bool:
+        """End every active fault at slice ``t`` (default: the net's
+        current clock) and drop faults scheduled to start later."""
+        self.failure_trace.heal_all(self._clock if t is None else t)
+        return True
+
     # -- Monitoring APIs ------------------------------------------------------
     def collect(self, interval: str | None = None) -> np.ndarray:
         """Global traffic matrix observed in the last run window (bytes)."""
@@ -106,7 +141,14 @@ class OpenOpticsNet:
         if self.schedule is None or self.routing is None:
             raise RuntimeError("deploy_topo and deploy_routing first")
         tables = FabricTables.build(self.schedule, self.routing)
-        res = simulate(tables, wl, self.fabric_cfg, num_slices)
+        masks = None
+        # only windows a fault can touch pay the failure branch — healed
+        # or not-yet-started traces keep the zero-failure fast path
+        if self.failure_trace.active_in(self._clock,
+                                        self._clock + num_slices):
+            masks = compile_masks(self.failure_trace, self.schedule,
+                                  num_slices, t0=self._clock)
+        res = simulate(tables, wl, self.fabric_cfg, num_slices, failures=masks)
         self._last_result = res
         self._last_workload = wl
         tm = np.zeros((self.n_nodes, self.n_nodes), dtype=np.float64)

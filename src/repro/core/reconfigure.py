@@ -55,6 +55,7 @@ import jax.numpy as jnp
 
 from . import routing_jnp, topology_jnp
 from .fabric import DROPPED, FabricConfig, Workload, _init_state, _make_step
+from .failures import surviving_conn
 from .topology import Schedule
 
 __all__ = ["ReconfigConfig", "ReconfigResult", "reconfigure"]
@@ -84,6 +85,13 @@ class ReconfigConfig:
         decomposition depth, and Sinkhorn normalization rounds
         (scheduler="bvn" only).
     max_hop / kpaths: forwarded to the routing compiler.
+    heal: detect -> repair epoch mode (repro.core.failures). When failure
+        masks are passed to :func:`reconfigure`, each epoch reads the
+        failure state at its first slice, masks the derived schedule down
+        to the surviving circuits, and recompiles over them — so the
+        measure -> match -> recompile -> hot-swap loop self-heals
+        on-device. Without masks (or with ``heal=False``) the loop is
+        oblivious to failures.
     """
 
     epoch_slices: int = 32
@@ -96,6 +104,7 @@ class ReconfigConfig:
     sinkhorn_iters: int = 50
     max_hop: int = 4
     kpaths: int = 4
+    heal: bool = False
 
 
 @dataclasses.dataclass
@@ -118,10 +127,12 @@ class ReconfigResult:
     hot_dst: np.ndarray          # [num_epochs, k_hot]
     demand_total: np.ndarray     # [num_epochs] pending bytes at epoch start
     epoch_conn: np.ndarray       # [num_epochs, T_e, N, U] schedule per epoch
+    failed_links: np.ndarray     # [num_epochs] dead circuits seen at epoch
+                                 # start (0 when run without failure masks)
 
 
 def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
-                rcfg: ReconfigConfig) -> ReconfigResult:
+                rcfg: ReconfigConfig, failures=None) -> ReconfigResult:
     """Run the traffic-aware reconfiguration loop (see module docstring).
 
     ``sched`` is the *base* cycle ([T0, N, U]). With
@@ -132,6 +143,12 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     derived purely from the measured demand (the base cycle only fixes N and
     U). All TO schemes hash multipath per packet, and the table lookup runs
     the plain-gather backend inside the epoch scan.
+
+    ``failures`` (a :class:`repro.core.failures.FailureMasks` covering
+    ``num_epochs * epoch_slices`` slices) threads fault state through the
+    fabric steps; with ``rcfg.heal`` each epoch additionally *detects* the
+    failure set at its first slice and recompiles the tables over the
+    surviving circuits — the self-healing detect -> repair loop.
     """
     if rcfg.scheme not in routing_jnp.SCHEMES:
         raise ValueError(f"unknown TO scheme {rcfg.scheme!r}: expected one "
@@ -160,6 +177,10 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
         t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
         is_eleph=dev(wl.is_eleph, jnp.bool_),
     )
+    if failures is not None:
+        failures.validate(rcfg.num_epochs * rcfg.epoch_slices, N)
+        j["link_cap"] = dev(failures.link_cap, jnp.float32)
+        j["node_ok"] = dev(failures.node_ok, jnp.bool_)
     num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
     out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
     return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
@@ -218,6 +239,16 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         else:
             conn_e = base_conn
 
+        # 2b. detect -> repair (repro.core.failures): the failure state at
+        # the epoch's first slice is the repair snapshot; recompiling over
+        # the surviving circuits below is the scheme-agnostic self-heal
+        n_failed = jnp.zeros((), jnp.int32)
+        if "link_cap" in j:
+            alive = j["link_cap"][t0] > 0.0              # [N, N]
+            n_failed = jnp.sum(~alive & offdiag.reshape(N, N)).astype(jnp.int32)
+            if rcfg.heal:
+                conn_e = surviving_conn(conn_e, ~alive)
+
         # 3. recompile the time-flow tables on-device
         tf_n, tf_d, inj_n, inj_d = routing_jnp.compile_tables(
             conn_e, rcfg.scheme, max_hop=rcfg.max_hop, kpaths=rcfg.kpaths)
@@ -231,7 +262,7 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
                                  t0 + jnp.arange(E, dtype=jnp.int32))
         ys.update(hot_src=hot_src, hot_dst=hot_dst,
                   demand_total=jnp.sum(jnp.where(rem, j["size"], 0)),
-                  epoch_conn=conn_e)
+                  epoch_conn=conn_e, failed_links=n_failed)
         return state, ys
 
     state0 = _init_state(j, num_flows)
@@ -251,4 +282,5 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         hot_src=ys["hot_src"], hot_dst=ys["hot_dst"],
         demand_total=ys["demand_total"],
         epoch_conn=ys["epoch_conn"],
+        failed_links=ys["failed_links"],
     )

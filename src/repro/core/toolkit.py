@@ -80,7 +80,9 @@ def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
 def check_tables(sched: Schedule, routing: CompiledRouting,
                  max_hops: int = 16, require_delivery: bool = False,
                  hashes: tuple[int, ...] = (0,),
-                 max_steps: int = 64) -> list[str]:
+                 max_steps: int = 64, link_fail: np.ndarray | None = None,
+                 check_walks: bool = True,
+                 t0s: "tuple[int, ...] | range | None" = None) -> list[str]:
     """Time-flow invariant checker: verify a compiled routing against the
     schedule it was compiled for. Returns a list of human-readable violation
     messages (empty = all invariants hold) so tests can assert
@@ -97,11 +99,21 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
       under the schedule: for arrival slice ``t`` (mod the table cycle
       ``Tr``) the circuit ``n -> egress`` must be up in schedule slice
       ``(t_abs + dep) % T`` for *every* absolute slice ``t_abs ≡ t (mod
-      Tr)``, i.e. for each residue of the combined ``lcm(T, Tr)`` cycle.
+      Tr)``, i.e. for each residue of the combined ``lcm(T, Tr)`` cycle;
+    * **failure avoidance** (only with ``link_fail``) — no live entry's
+      egress crosses a circuit marked failed in the ``[N, N]`` bool mask
+      (e.g. :meth:`repro.core.failures.FailureMasks.failed_links`). This is
+      the post-repair soundness proof for
+      :func:`repro.core.failures.repair` /
+      :func:`repro.core.failures.fast_reroute` output.
 
-    Walk invariants, for every (src, dst, t0 in cycle, hash in ``hashes``)
-    — the same walk :func:`trace_packet` narrates, so a violation here is
-    reproducible with a one-line trace:
+    Walk invariants (skipped when ``check_walks=False`` — fast-reroute
+    detours are statically sound but deliberately best-effort on walks),
+    for every (src, dst, t0, hash in ``hashes``) — the same walk
+    :func:`trace_packet` narrates, so a violation here is reproducible with
+    a one-line trace. ``t0s`` restricts the start slices swept (default:
+    the full combined ``lcm(T, Tr)`` cycle); walks also never ride a
+    ``link_fail``-failed circuit:
 
     * **time monotonicity** — delivery/departure slots never move backwards
       along a path (each hop departs at or after the packet's arrival);
@@ -117,6 +129,12 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
     admit longer-than-shortest paths, and a fixed non-zero hash at every hop
     is not loop-free (true of the networkx implementation it replaced, too)
     — sweep such schemes with ``hashes=(0,)``.
+
+    The walk sweep is vectorized over all (src, dst, t0) simultaneously
+    (one batched table gather per step instead of a Python walk per pair —
+    ~100x, which is what makes paper-scale 108-ToR sweeps feasible); the
+    scalar reference walk is kept as :func:`_check_walk` and re-run only on
+    violating walks to produce the narrated message.
     """
     bad: list[str] = []
     T, N, _U = sched.conn.shape
@@ -147,30 +165,107 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
                     f"{name}: dark circuit {n_i[j]}->{nxt[t_i[j], n_i[j], d_i[j], s_i[j]]} "
                     f"for (arr={t_i[j]}, dst={d_i[j]}, slot={s_i[j]}) at "
                     f"abs slice {t_abs[j]} dep +{dep[t_i[j], n_i[j], d_i[j], s_i[j]]}")
+        if link_fail is not None and t_i.size:
+            e_i = nxt[t_i, n_i, d_i, s_i]
+            hit = link_fail[n_i, e_i]
+            for j in np.nonzero(hit)[0][:8]:
+                bad.append(
+                    f"{name}: entry rides failed link {n_i[j]}->{e_i[j]} "
+                    f"for (arr={t_i[j]}, dst={d_i[j]}, slot={s_i[j]})")
         if len(bad) > 64:
             return bad
 
+    if not check_walks:
+        return bad
+
     cycle = math.lcm(T, Tr)
-    for src in range(N):
-        for dst in range(N):
-            if src == dst:
-                continue
-            for t0 in range(cycle):
-                for hashv in hashes:
-                    msg = _check_walk(sched, routing, src, dst, t0, hashv,
-                                      max_hops, require_delivery, max_steps)
-                    if msg:
-                        bad.append(msg)
-                        if len(bad) > 64:
-                            return bad
+    t0s = range(cycle) if t0s is None else t0s
+    viol = _check_walks_vec(sched, routing, hashes, max_hops,
+                            require_delivery, max_steps, link_fail, t0s)
+    for src, dst, t0, hashv in viol:
+        msg = _check_walk(sched, routing, src, dst, t0, hashv, max_hops,
+                          require_delivery, max_steps, link_fail)
+        assert msg is not None, "vectorized walk flagged a clean scalar walk"
+        bad.append(msg)
+        if len(bad) > 64:
+            return bad
     return bad
+
+
+def _check_walks_vec(sched: Schedule, routing: CompiledRouting, hashes,
+                     max_hops: int, require_delivery: bool, max_steps: int,
+                     link_fail: np.ndarray | None, t0s) -> list[tuple]:
+    """Vectorized table walks: advance *all* (src, dst, t0) walks of each
+    hash in lock-step (same semantics as :func:`_check_walk`, one batched
+    gather per step). Returns the violating (src, dst, t0, hash) tuples in
+    the scalar sweep's (src, dst, t0, hash) iteration order."""
+    Tr = routing.num_slices
+    Ts, N = sched.num_slices, sched.num_nodes
+    from .routing import _has_circuit_grid
+    has = _has_circuit_grid(sched)                       # [Ts, N, N]
+    if link_fail is not None:
+        has = has & ~link_fail[None]
+    t0_arr = np.asarray(list(t0s), dtype=np.int64)
+    src0, dst0, t00 = [a.ravel() for a in np.meshgrid(
+        np.arange(N), np.arange(N), t0_arr, indexing="ij")]
+    keep = src0 != dst0
+    src0, dst0, t00 = src0[keep], dst0[keep], t00[keep]
+    W = src0.size
+    ACTIVE, OK, VIOL = 0, 1, 2
+    found: list[tuple] = []
+    for hi, hashv in enumerate(hashes):
+        node = src0.copy()
+        t = t00.copy()
+        hops = np.zeros(W, np.int64)
+        code = np.full(W, ACTIVE, np.int8)
+        widx = np.arange(W)
+        for step in range(max_steps):
+            act = code == ACTIVE
+            if not act.any():
+                break
+            code[act & (node == dst0)] = OK              # delivered
+            act = code == ACTIVE
+            tbl_n = routing.inj_next if step == 0 else routing.tf_next
+            tbl_d = routing.inj_dep if step == 0 else routing.tf_dep
+            row_n = tbl_n[t % Tr, node, dst0]            # [W, K]
+            row_d = tbl_d[t % Tr, node, dst0]
+            nvalid = (row_n >= 0).sum(axis=-1)
+            stuck = act & (nvalid == 0)
+            code[stuck] = VIOL if require_delivery else OK
+            act = code == ACTIVE
+            slot = hashv % np.maximum(nvalid, 1)
+            nxt = row_n[widx, slot].astype(np.int64)
+            off = row_d[widx, slot].astype(np.int64)
+            code[act & (off < 0)] = VIOL                 # time backwards
+            act = code == ACTIVE
+            wire = t + off
+            opt = nxt < N
+            dark = act & opt & ~has[wire % Ts, node, np.clip(nxt, 0, N - 1)]
+            code[dark] = VIOL                            # dark/failed circuit
+            act = code == ACTIVE
+            node = np.where(act, np.where(opt, nxt, dst0), node)
+            t = np.where(act, np.where(opt, wire, wire + 1), t)
+            hops = hops + act
+            code[act & (hops > max_hops)] = VIOL         # hop bound
+        code[code == ACTIVE] = VIOL                      # never resolved: loop
+        # walks are meshgrid-ordered, i.e. (src, dst, t0)-lexicographic, so
+        # the first 65 per hash already cover everything the caller's
+        # 64-message truncation can emit — badly broken tables don't build
+        # millions of violation tuples just to discard them
+        for j in np.nonzero(code == VIOL)[0][:65]:
+            found.append((int(src0[j]), int(dst0[j]), int(t00[j]), hi))
+    # scalar sweep order is src -> dst -> t0 -> hash
+    found.sort()
+    return [(s, d, t0, hashes[hi]) for s, d, t0, hi in found]
 
 
 def _check_walk(sched: Schedule, routing: CompiledRouting, src: int,
                 dst: int, t0: int, hashv: int, max_hops: int,
-                require_delivery: bool, max_steps: int) -> str | None:
+                require_delivery: bool, max_steps: int,
+                link_fail: np.ndarray | None = None) -> str | None:
     """One table walk (same semantics as :func:`trace_packet`); returns a
-    violation message or None."""
+    violation message or None. This is the scalar reference for
+    :func:`_check_walks_vec`, kept to narrate the violations it finds."""
     T = routing.num_slices
     node, t, hops = src, t0, 0
     tbl_next, tbl_dep = routing.inj_next, routing.inj_dep
@@ -193,6 +288,9 @@ def _check_walk(sched: Schedule, routing: CompiledRouting, src: int,
             return f"{where}: time moves backwards at node {node} (dep {off})"
         wire_t = t + off
         if nxt < sched.num_nodes:
+            if link_fail is not None and link_fail[node, nxt]:
+                return (f"{where}: rides failed link {node}->{nxt} "
+                        f"at slice {wire_t}")
             if not sched.has_circuit(node, nxt, wire_t):
                 return (f"{where}: rides dark circuit {node}->{nxt} "
                         f"at slice {wire_t}")

@@ -164,7 +164,8 @@ def greedy_assignment(w: jnp.ndarray) -> jnp.ndarray:
 
 
 def bvn_conn(tm: jnp.ndarray, num_slices: int = 32, max_perms: int = 8,
-             sinkhorn_iters: int = 200, eps: float = 1e-9) -> jnp.ndarray:
+             sinkhorn_iters: int = 200, eps: float = 1e-9,
+             with_info: bool = False):
     """Device analogue of :func:`repro.core.topology.bvn`: Sinkhorn-normalize
     the TM, peel ``max_perms`` permutations off the residual with
     :func:`greedy_assignment`, and emit a ``[num_slices, N, 1]`` schedule
@@ -176,6 +177,13 @@ def bvn_conn(tm: jnp.ndarray, num_slices: int = 32, max_perms: int = 8,
     residual yields ~zero-weight permutations that receive no slices. A
     self-pair chosen by a forced assignment is emitted dark (-1), so every
     slice passes ``deploy_topo_check``.
+
+    With ``with_info=True`` also returns ``perm_found[max_perms]`` (bool):
+    whether peel ``i`` still covered positive residual support — i.e. the
+    *effective* decomposition depth is ``perm_found.sum()``. Dead-end peels
+    past that depth weigh ~``eps`` and receive no slices; the mask lets
+    callers (benchmarks, the demand-aware example) tell how much of the
+    ``max_perms`` budget the TM actually used.
     """
     N = tm.shape[0]
     rows = jnp.arange(N, dtype=jnp.int32)
@@ -186,11 +194,13 @@ def bvn_conn(tm: jnp.ndarray, num_slices: int = 32, max_perms: int = 8,
         got = residual[rows, perm]
         # weight: smallest residual actually covered by a support edge; a
         # fully-off-support assignment (exhausted residual) weighs ~eps
+        found = jnp.min(got) > eps
         w = jnp.maximum(jnp.min(got), eps)
         residual = residual.at[rows, perm].add(-w)
-        return residual, (perm, w)
+        return residual, (perm, w, found)
 
-    _, (perms, weights) = jax.lax.scan(peel, m, None, length=max_perms)
+    _, (perms, weights, perm_found) = jax.lax.scan(
+        peel, m, None, length=max_perms)
     weights = jnp.maximum(weights, 0.0)                  # [max_perms]
     cdf = jnp.cumsum(weights)
     total = jnp.maximum(cdf[-1], eps)
@@ -199,4 +209,7 @@ def bvn_conn(tm: jnp.ndarray, num_slices: int = 32, max_perms: int = 8,
     pidx = jnp.clip(jnp.searchsorted(cdf, q, side="left"), 0, max_perms - 1)
     sel = perms[pidx]                                    # [num_slices, N]
     sel = jnp.where(sel == rows[None, :], -1, sel)       # forced self -> dark
-    return sel[:, :, None].astype(jnp.int32)             # [S, N, 1]
+    conn = sel[:, :, None].astype(jnp.int32)             # [S, N, 1]
+    if with_info:
+        return conn, perm_found
+    return conn

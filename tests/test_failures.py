@@ -1,0 +1,579 @@
+"""Tests for the failure & resilience subsystem (:mod:`repro.core.failures`).
+
+Load-bearing properties:
+
+* **zero-failure parity** — an *empty* failure trace compiled to all-healthy
+  masks must leave ``simulate``, ``simulate_phased``, and ``reconfigure``
+  bit-identical to runs without masks (and without masks the traced program
+  is literally the pre-failure one, so the fabric goldens stay untouched);
+* **repair golden** — recompiling over the surviving adjacency must be
+  bit-identical between the numpy and jnp compilers, and the repaired
+  tables must prove clean under ``check_tables(..., link_fail=...)``;
+* **failure semantics** — dead links stop carrying (packets re-enqueue and
+  deliver after the heal), down ToRs neither inject nor terminate
+  electrical transfers, degradation throttles capacity;
+* **self-healing** — the detect -> repair epoch mode of ``reconfigure``
+  restores delivery under a link failure that the oblivious loop bleeds on.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (FabricConfig, FabricTables, FailureMasks,
+                        FailureTrace, ReconfigConfig, backup_tables,
+                        clos_routing, compile_masks, direct, fast_reroute,
+                        hoho, OpenOpticsNet, random_trace, reconfigure,
+                        repair, round_robin, simulate, simulate_phased,
+                        synthesize, toolkit, ucmp, vlb)
+from repro.core.failures import OPEN_END, surviving_conn
+from repro.core.fabric import Workload
+from repro.core.topology import Schedule
+
+N_TORS = 8
+SLICE_BYTES = 10_000
+
+TO_SCHEMES = ("direct", "vlb", "opera", "ucmp", "hoho")
+TA_SCHEMES = ("ecmp", "wcmp", "ksp")
+
+
+def _workload(load=0.5, seed=3, max_packets=1500):
+    return synthesize("rpc", N_TORS, 40, slice_bytes=SLICE_BYTES, load=load,
+                      max_packets=max_packets, seed=seed)
+
+
+def _pair_workload(src, dst, P=800, t_hi=30, seed=0):
+    rng = np.random.default_rng(seed)
+    return Workload(
+        src=np.full(P, src, np.int32), dst=np.full(P, dst, np.int32),
+        size=np.full(P, 1000, np.int32),
+        t_inject=rng.integers(0, t_hi, P).astype(np.int32),
+        flow=(np.arange(P, dtype=np.int32) % 16),
+        seq=np.arange(P, dtype=np.int32) // 16,
+        is_eleph=np.zeros(P, bool))
+
+
+def _random_schedule(seed, n, T, U, fill=0.7):
+    rng = np.random.default_rng(seed)
+    conn = rng.integers(0, n, size=(T, n, U)).astype(np.int32)
+    self_loop = conn == np.arange(n, dtype=np.int32)[None, :, None]
+    conn = np.where(self_loop, (conn + 1) % n, conn)
+    dark = rng.random(size=conn.shape) > fill
+    return Schedule(np.where(dark, np.int32(-1), conn))
+
+
+def _random_failed(seed, n, p=0.2):
+    rng = np.random.default_rng(seed)
+    failed = rng.random((n, n)) < p
+    np.fill_diagonal(failed, False)
+    return failed
+
+
+# ---------------------------------------------------------------------------
+# fault traces -> masks
+# ---------------------------------------------------------------------------
+
+
+def test_link_flap_window():
+    sched = round_robin(N_TORS, 1)
+    tr = FailureTrace().link_flap(2, 5, 10, 20)
+    m = compile_masks(tr, sched, 30)
+    assert (m.link_cap[:10, 2, 5] == 1.0).all()
+    assert (m.link_cap[10:20, 2, 5] == 0.0).all()
+    assert (m.link_cap[20:, 2, 5] == 1.0).all()
+    assert m.node_ok.all()
+    assert m.failed_links(15)[2, 5] and not m.failed_links(5).any()
+
+
+def test_open_ended_until_healed():
+    sched = round_robin(N_TORS, 1)
+    tr = FailureTrace().link_flap(1, 3, 5)
+    m = compile_masks(tr, sched, 20)
+    assert (m.link_cap[5:, 1, 3] == 0.0).all()
+    tr.heal_all(12)
+    m2 = compile_masks(tr, sched, 20)
+    assert (m2.link_cap[5:12, 1, 3] == 0.0).all()
+    assert (m2.link_cap[12:, 1, 3] == 1.0).all()
+
+
+def test_heal_drops_future_events():
+    tr = FailureTrace().link_flap(1, 3, 5).tor_outage(2, 15)
+    tr.heal_all(10)
+    assert len(tr.events) == 1 and tr.events[0].t_end == 10
+
+
+def test_tor_outage_lowers_row_col_and_node():
+    sched = round_robin(N_TORS, 1)
+    m = compile_masks(FailureTrace().tor_outage(4, 3, 8), sched, 10)
+    assert (m.link_cap[3:8, 4, :] == 0.0).all()
+    assert (m.link_cap[3:8, :, 4] == 0.0).all()
+    assert not m.node_ok[3:8, 4].any()
+    assert m.node_ok[:3, 4].all() and m.node_ok[8:, 4].all()
+    off = m.link_cap[5].copy()
+    off[4, :] = off[:, 4] = 1.0
+    assert (off == 1.0).all()
+
+
+def test_stuck_port_follows_schedule():
+    sched = round_robin(N_TORS, 1)          # uplink 0: i -> (i+t+1) % N
+    m = compile_masks(FailureTrace().stuck_port(2, 0, 0, 3), sched, 5)
+    for t in range(3):
+        peer = sched.conn[t % sched.num_slices, 2, 0]
+        assert m.link_cap[t, 2, peer] == 0.0
+        assert (m.link_cap[t, 2] == 0.0).sum() == 1   # only that circuit
+    assert (m.link_cap[3:] == 1.0).all()
+
+
+def test_degrade_scales_and_composes():
+    sched = round_robin(N_TORS, 1)
+    tr = FailureTrace().degrade(0, 1, 0.5, 0, 10).degrade(0, 1, 0.5, 5, 10)
+    m = compile_masks(tr, sched, 10)
+    assert np.allclose(m.link_cap[:5, 0, 1], 0.5)
+    assert np.allclose(m.link_cap[5:, 0, 1], 0.25)
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        from repro.core import FailureEvent
+        FailureEvent("fire", 0, 10)
+    with pytest.raises(ValueError, match="window"):
+        FailureTrace().link_flap(0, 1, 10, 10)
+    with pytest.raises(ValueError, match="scale"):
+        FailureTrace().degrade(0, 1, 1.5, 0)
+    # a forgotten field must raise, not negative-index the mask tensors
+    with pytest.raises(ValueError, match="dst"):
+        FailureTrace().link_flap(2, -1, 0)
+    with pytest.raises(ValueError, match="node"):
+        FailureTrace().tor_outage(-1, 0)
+    with pytest.raises(ValueError, match="uplink"):
+        FailureTrace().stuck_port(2, -1, 0)
+    # and out-of-schedule indices are caught at mask-compile time
+    sched = round_robin(N_TORS, 1)
+    with pytest.raises(ValueError, match="outside"):
+        compile_masks(FailureTrace().link_flap(0, N_TORS, 0), sched, 10)
+    with pytest.raises(ValueError, match="outside"):
+        compile_masks(FailureTrace().stuck_port(0, 1, 0), sched, 10)
+
+
+def test_stuck_port_matches_fabric_phase_across_windows():
+    """The fabric's scan index restarts at 0 every run window, so a port
+    fault injected mid-cycle (t0 not a multiple of T) must darken the
+    circuits of the *window-local* schedule phase — the ones the fabric
+    will actually run — not the absolute-clock phase."""
+    sched = round_robin(N_TORS, 1)              # T = 7
+    t0 = 10                                     # window starts mid-cycle
+    tr = FailureTrace().stuck_port(2, 0, t0, t0 + 3)
+    m = compile_masks(tr, sched, 5, t0=t0)
+    for s in range(3):                          # local slices 0..2 affected
+        peer = sched.conn[s % sched.num_slices, 2, 0]
+        assert m.link_cap[s, 2, peer] == 0.0
+        assert (m.link_cap[s, 2] == 0.0).sum() == 1
+    assert (m.link_cap[3:] == 1.0).all()
+
+
+def test_random_trace_reproducible():
+    sched = round_robin(N_TORS, 2)
+    a = random_trace(7, sched, 50)
+    b = random_trace(7, sched, 50)
+    assert a.events == b.events
+    assert random_trace(8, sched, 50).events != a.events
+    m = compile_masks(a, sched, 50)
+    assert m.link_cap.shape == (50, N_TORS, N_TORS)
+
+
+def test_masks_validate_shape():
+    m = FailureMasks.healthy(10, 4)
+    with pytest.raises(ValueError, match="cover"):
+        m.validate(11, 4)
+    with pytest.raises(ValueError, match="cover"):
+        m.validate(10, 5)
+    sched = round_robin(4, 1)
+    wl = _pair_workload(0, 1, P=10, t_hi=2)
+    with pytest.raises(ValueError, match="cover"):
+        simulate(FabricTables.build(sched, direct(sched)), wl,
+                 FabricConfig(), 20, failures=m)
+
+
+# ---------------------------------------------------------------------------
+# zero-failure parity
+# ---------------------------------------------------------------------------
+
+
+SIM_FIELDS = ("t_deliver", "loc_final", "nhops", "delivered_bytes", "dropped",
+              "buf_bytes", "offl_bytes", "blocked_inj", "slice_miss",
+              "reorder_cnt")
+
+
+def _assert_sim_equal(a, b):
+    for f in SIM_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+@pytest.mark.parametrize("cfg", [
+    FabricConfig(slice_bytes=SLICE_BYTES),
+    FabricConfig(slice_bytes=SLICE_BYTES, pushback=True, offload=True),
+    FabricConfig(slice_bytes=SLICE_BYTES, elec_bytes=2000, flow_pausing=True),
+], ids=["base", "pushback-offload", "hybrid-pausing"])
+def test_empty_masks_bit_identical_simulate(cfg):
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    tables = FabricTables.build(sched, vlb(sched))
+    masks = compile_masks(FailureTrace(), sched, 48)
+    _assert_sim_equal(simulate(tables, wl, cfg, 48),
+                      simulate(tables, wl, cfg, 48, failures=masks))
+
+
+def test_empty_masks_bit_identical_reconfigure():
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=3, scheme="hoho",
+                          k_hot=0, heal=True)
+    masks = compile_masks(FailureTrace(), sched, 36)
+    a = reconfigure(sched, wl, cfg, rcfg)
+    b = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+    np.testing.assert_array_equal(a.t_deliver, b.t_deliver)
+    np.testing.assert_array_equal(a.delivered_bytes, b.delivered_bytes)
+    np.testing.assert_array_equal(a.epoch_conn, b.epoch_conn)
+    assert (a.failed_links == 0).all() and (b.failed_links == 0).all()
+
+
+def test_simulate_phased_single_phase_parity():
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    r = ucmp(sched)
+    _assert_sim_equal(simulate(FabricTables.build(sched, r), wl, cfg, 48),
+                      simulate_phased(sched, [(r, 48)], wl, cfg))
+
+
+def test_simulate_phased_same_tables_split_parity():
+    """Swapping in the *same* tables mid-run must be a no-op."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    r = hoho(sched)
+    _assert_sim_equal(simulate_phased(sched, [(r, 48)], wl, cfg),
+                      simulate_phased(sched, [(r, 20), (r, 28)], wl, cfg))
+
+
+# ---------------------------------------------------------------------------
+# failure semantics in the jitted fabric
+# ---------------------------------------------------------------------------
+
+
+def test_dead_link_blocks_then_recovers():
+    """Direct routing rides exactly the (src, dst) circuit: while it is
+    dark nothing is delivered (the packets re-enqueue), after the heal the
+    backlog drains."""
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, t_hi=10)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, direct(sched))
+    S = 80
+    masks = compile_masks(FailureTrace().link_flap(2, 5, 0, 40), sched, S)
+    res = simulate(tables, wl, cfg, S, failures=masks)
+    done = res.t_deliver >= 0
+    assert not (res.t_deliver[done] < 40).any()     # nothing while dark
+    assert done.any()                               # backlog drains after
+    healthy = simulate(tables, wl, cfg, S)
+    assert (healthy.t_deliver >= 0).sum() > 0
+    assert (healthy.t_deliver[healthy.t_deliver >= 0] < 40).any()
+
+
+def test_degraded_link_throttles_throughput():
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, P=1200, t_hi=10)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, direct(sched))
+    S = 60
+    half = compile_masks(FailureTrace().degrade(2, 5, 0.5, 0), sched, S)
+    full = simulate(tables, wl, cfg, S)
+    slow = simulate(tables, wl, cfg, S, failures=half)
+    assert slow.delivered_bytes.sum() < full.delivered_bytes.sum()
+    assert slow.delivered_bytes.sum() > 0
+
+
+def test_down_tor_does_not_inject():
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(3, 6, t_hi=5)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, direct(sched))
+    S = 60
+    masks = compile_masks(FailureTrace().tor_outage(3, 0, 30), sched, S)
+    res = simulate(tables, wl, cfg, S, failures=masks)
+    done = res.t_deliver >= 0
+    assert not (res.t_deliver[done] < 30).any()
+    assert done.any()                               # injects after the heal
+
+
+def test_electrical_holds_for_down_dst():
+    """Clos (pure electrical) traffic to a down ToR waits; other pairs are
+    unaffected."""
+    sched = round_robin(N_TORS, 1)
+    wl_a = _pair_workload(0, 4, P=200, t_hi=5)
+    wl_b = _pair_workload(1, 2, P=200, t_hi=5, seed=1)
+    wl = Workload(**{f.name: np.concatenate(
+        [getattr(wl_a, f.name), getattr(wl_b, f.name)])
+        for f in dataclasses.fields(Workload)})
+    cfg = FabricConfig(slice_bytes=0, elec_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, clos_routing(N_TORS))
+    S = 60
+    masks = compile_masks(FailureTrace().tor_outage(4, 0, 30), sched, S)
+    res = simulate(tables, wl, cfg, S, failures=masks)
+    to_dead = np.asarray(wl.dst) == 4
+    done = res.t_deliver >= 0
+    assert not (res.t_deliver[done & to_dead] < 30).any()
+    assert done[~to_dead].all()
+    assert (res.t_deliver[done & to_dead] >= 30).any()
+
+
+# ---------------------------------------------------------------------------
+# repair: golden numpy vs jnp + post-repair soundness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheme", TO_SCHEMES)
+@pytest.mark.parametrize("seed", range(3))
+def test_repair_golden_numpy_vs_jnp(scheme, seed):
+    rng = np.random.default_rng(seed + 40)
+    sched = _random_schedule(seed, int(rng.integers(5, 9)),
+                             int(rng.integers(2, 6)), int(rng.integers(1, 3)))
+    failed = _random_failed(seed, sched.num_nodes)
+    r_np = repair(sched, scheme, failed, impl="numpy")
+    r_j = repair(sched, scheme, failed, impl="jnp")
+    np.testing.assert_array_equal(r_np.tf_next, r_j.tf_next)
+    np.testing.assert_array_equal(r_np.tf_dep, r_j.tf_dep)
+    np.testing.assert_array_equal(r_np.inj_next, r_j.inj_next)
+    np.testing.assert_array_equal(r_np.inj_dep, r_j.inj_dep)
+
+
+@pytest.mark.parametrize("scheme", TO_SCHEMES + TA_SCHEMES)
+@pytest.mark.parametrize("seed", range(3))
+def test_repair_soundness(scheme, seed):
+    """No live entry of a repaired table crosses a failed link, and the
+    repaired walks stay invariant-clean on the surviving schedule."""
+    T = 1 if scheme in TA_SCHEMES else 4
+    sched = _random_schedule(seed + 10, N_TORS, T, 2)
+    failed = _random_failed(seed + 10, N_TORS, p=0.3)
+    r = repair(sched, scheme, failed)
+    hashes = (0,) if scheme == "ksp" else (0, 1)
+    assert toolkit.check_tables(sched, r, link_fail=failed, hashes=hashes,
+                                max_hops=32) == []
+
+
+def test_unrepaired_tables_flagged():
+    """The soundness check must actually detect an oblivious table: kill a
+    circuit the rotor cycle certainly uses."""
+    sched = round_robin(N_TORS, 1)
+    r = direct(sched)
+    failed = np.zeros((N_TORS, N_TORS), bool)
+    failed[2, 5] = True
+    bad = toolkit.check_tables(sched, r, link_fail=failed)
+    assert any("failed link" in m for m in bad)
+
+
+def test_repair_rejects_bad_args():
+    sched = round_robin(N_TORS, 1)
+    failed = np.zeros((N_TORS, N_TORS), bool)
+    with pytest.raises(ValueError, match="scheme"):
+        repair(sched, "bgp", failed)
+    with pytest.raises(ValueError, match="impl"):
+        repair(sched, "hoho", failed, impl="torch")
+    with pytest.raises(ValueError, match="host-only"):
+        repair(Schedule(sched.conn[:1]), "ecmp", failed, impl="jnp")
+
+
+def test_surviving_conn_masks_both_backends():
+    sched = round_robin(N_TORS, 1)
+    failed = _random_failed(1, N_TORS, p=0.3)
+    host = surviving_conn(sched.conn, failed)
+    import jax.numpy as jnp
+    dev = np.asarray(surviving_conn(jnp.asarray(sched.conn),
+                                    jnp.asarray(failed)))
+    np.testing.assert_array_equal(host, dev)
+    t, n, u = np.nonzero(host >= 0)
+    assert not failed[n, host[t, n, u]].any()
+
+
+# ---------------------------------------------------------------------------
+# backup tables + local fast reroute
+# ---------------------------------------------------------------------------
+
+
+def test_backup_tables_earliest_distinct_peers():
+    sched = round_robin(N_TORS, 1)
+    bk_next, bk_off = backup_tables(sched, max_cands=4)
+    T, N = sched.num_slices, sched.num_nodes
+    from repro.core.routing import first_direct_offsets
+    fd = first_direct_offsets(sched)
+    for t in range(0, T, 3):
+        for n in range(0, N, 3):
+            cands = bk_next[t, n]
+            offs = bk_off[t, n]
+            live = cands >= 0
+            assert (np.diff(offs[live]) >= 0).all()      # offset-ordered
+            assert len(set(cands[live].tolist())) == live.sum()
+            for m, o in zip(cands[live], offs[live]):
+                assert fd[t, n, m] == o                  # really earliest
+
+
+def test_fast_reroute_static_soundness_and_contiguity():
+    sched = round_robin(N_TORS, 1)
+    for alg in (hoho, ucmp, vlb, direct):
+        r = alg(sched)
+        failed = _random_failed(3, N_TORS, p=0.25)
+        patched = fast_reroute(r, sched, failed)
+        bad = toolkit.check_tables(sched, patched, link_fail=failed,
+                                   check_walks=False)
+        assert bad == [], (alg.__name__, bad[:3])
+
+
+def test_fast_reroute_installs_detour():
+    """A cell whose only slot dies gets the earliest surviving circuit."""
+    sched = round_robin(N_TORS, 1)
+    r = direct(sched)
+    failed = np.zeros((N_TORS, N_TORS), bool)
+    failed[2, 5] = True
+    patched = fast_reroute(r, sched, failed)
+    # direct's (t, 2, 5) entries all rode 2->5; now they detour
+    for t in range(sched.num_slices):
+        e = patched.tf_next[t, 2, 5, 0]
+        assert e >= 0 and e != 5
+        assert sched.has_circuit(2, int(e), t + int(patched.tf_dep[t, 2, 5, 0]))
+
+
+def test_fast_reroute_delivers_more_than_oblivious():
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, t_hi=20)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    r = direct(sched)
+    S = 60
+    masks = compile_masks(FailureTrace().link_flap(2, 5, 0), sched, S)
+    obl = simulate(FabricTables.build(sched, r), wl, cfg, S, failures=masks)
+    frr = simulate_phased(sched, [(fast_reroute(r, sched,
+                                                masks.failed_links(0)), S)],
+                          wl, cfg, failures=masks)
+    assert frr.delivered_bytes.sum() > obl.delivered_bytes.sum()
+    assert obl.delivered_bytes.sum() == 0               # direct never reroutes
+
+
+def test_fast_reroute_rejects_cycle_mismatch():
+    sched = round_robin(N_TORS, 1)
+    from repro.core import ecmp
+    r = ecmp(Schedule(sched.conn[:1]))                  # Tr=1 on T=7 schedule
+    with pytest.raises(ValueError, match="cycle"):
+        fast_reroute(r, sched, np.zeros((N_TORS, N_TORS), bool))
+
+
+# ---------------------------------------------------------------------------
+# self-healing reconfiguration
+# ---------------------------------------------------------------------------
+
+
+def test_heal_reroutes_around_dead_link():
+    """A permanent link failure on the hot pair: the oblivious loop keeps
+    riding the dead entry; the detect -> repair loop recompiles around it
+    and delivers strictly more."""
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, P=1600, t_hi=60)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    S = 96
+    masks = compile_masks(FailureTrace().link_flap(2, 5, 24), sched, S)
+    base = dict(epoch_slices=12, num_epochs=8, scheme="hoho", k_hot=0)
+    got = {}
+    for heal in (False, True):
+        rcfg = ReconfigConfig(**base, heal=heal)
+        res = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+        got[heal] = res
+    assert got[True].delivered_bytes.sum() > got[False].delivered_bytes.sum()
+    # detection: epochs starting at t >= 24 see exactly one failed circuit
+    assert (got[True].failed_links[:2] == 0).all()
+    assert (got[True].failed_links[2:] == 1).all()
+
+
+def test_heal_epoch_conn_avoids_failures():
+    """The recorded epoch schedules must be masked to the survivors."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    S = 48
+    masks = compile_masks(FailureTrace().tor_outage(3, 12, OPEN_END),
+                          sched, S)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=4, scheme="hoho",
+                          k_hot=0, heal=True)
+    res = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+    for e in range(1, 4):                    # epochs that start after t=12
+        conn_e = res.epoch_conn[e]
+        t, n, u = np.nonzero(conn_e >= 0)
+        assert not (n == 3).any()
+        assert not (conn_e[t, n, u] == 3).any()
+    np.testing.assert_array_equal(res.epoch_conn[0], sched.conn)
+
+
+def test_recovery_after_mid_run_tor_outage():
+    """The acceptance scenario: delivery rate dips during a mid-run ToR
+    outage and recovers after it clears (self-healing loop)."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload(load=0.6, seed=5)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    E, n_ep = 12, 6
+    S = E * n_ep
+    masks = compile_masks(FailureTrace().tor_outage(4, 14, 40), sched, S)
+    rcfg = ReconfigConfig(epoch_slices=E, num_epochs=n_ep, scheme="hoho",
+                          k_hot=0, heal=True)
+    res = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+    per_epoch = res.delivered_bytes.reshape(n_ep, E).sum(axis=1)
+    dip = per_epoch[1:3].mean()              # outage spans epochs 1-2
+    recovered = per_epoch[3:5].mean()
+    assert recovered > dip
+    involved = (np.asarray(wl.src) == 4) | (np.asarray(wl.dst) == 4)
+    done = res.t_deliver >= 0
+    assert done[involved].any()              # ToR-4 traffic resumes too
+
+
+# ---------------------------------------------------------------------------
+# the OpenOpticsNet failure API
+# ---------------------------------------------------------------------------
+
+
+def test_net_inject_failure_and_heal():
+    net = OpenOpticsNet(dict(node="rack", node_num=N_TORS, uplink=1,
+                             slice_us=10.0,
+                             fabric=dict(slice_bytes=SLICE_BYTES)))
+    sched = round_robin(N_TORS, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(direct(sched))
+    wl = _pair_workload(2, 5, t_hi=10)
+    healthy = net.run(wl, 40)
+    assert (healthy.t_deliver >= 0).any()
+
+    net2 = OpenOpticsNet(dict(node="rack", node_num=N_TORS, uplink=1,
+                              slice_us=10.0,
+                              fabric=dict(slice_bytes=SLICE_BYTES)))
+    net2.deploy_topo(sched)
+    net2.deploy_routing(direct(sched))
+    net2.inject_failure("link", node=2, dst=5)
+    res = net2.run(wl, 40)
+    assert not (res.t_deliver >= 0).any()    # open-ended failure: no delivery
+    net2.heal()                              # next window is healthy again
+    res2 = net2.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert (res2.t_deliver >= 0).any()
+    with pytest.raises(ValueError, match="kind"):
+        net2.inject_failure("meteor", node=0)
+
+
+def test_net_failure_clock_offsets_windows():
+    """Failures are injected on the net's absolute clock: a fault scheduled
+    inside the second run() window must not affect the first."""
+    net = OpenOpticsNet(dict(node="rack", node_num=N_TORS, uplink=1,
+                             slice_us=10.0,
+                             fabric=dict(slice_bytes=SLICE_BYTES)))
+    sched = round_robin(N_TORS, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(direct(sched))
+    net.inject_failure("link", node=2, dst=5, t_start=40)
+    first = net.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert (first.t_deliver >= 0).any()      # window [0, 40): healthy
+    second = net.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert not (second.t_deliver >= 0).any()  # window [40, 80): dark

@@ -1,0 +1,86 @@
+"""Property-based failure sweep (hypothesis): random schedules x random
+failure sets x every routing scheme (TO and TA).
+
+The acceptance property: :func:`repro.core.failures.repair` recompiles over
+the surviving adjacency, and :func:`repro.core.toolkit.check_tables` with
+``link_fail=`` proves that no live time-flow entry (and no walked path)
+crosses a failed link. Fast reroute is held to the static half of that
+contract (its detours are deliberately best-effort on walks), and the
+numpy/jnp repair golden is swept over random failure sets too.
+
+The deterministic subset of these cases lives in ``test_failures.py``; in
+CI this module always runs (``tests/conftest.py`` hard-errors there when
+hypothesis is missing).
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fast_reroute, repair, toolkit
+
+from invariant_cases import random_schedule
+
+TO_NAMES = ["direct", "vlb", "opera", "ucmp", "hoho"]
+TA_NAMES = ["ecmp", "wcmp", "ksp"]
+
+
+def _random_failed(seed: int, n: int, p: float) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    failed = rng.random((n, n)) < p
+    np.fill_diagonal(failed, False)
+    return failed
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheme=st.sampled_from(TO_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 9), T=st.integers(1, 5), U=st.integers(1, 3),
+       p=st.floats(0.05, 0.5))
+def test_repaired_to_tables_avoid_failed_links(scheme, seed, n, T, U, p):
+    sched = random_schedule(seed, n, T, U)
+    failed = _random_failed(seed ^ 0x5EED, n, p)
+    r = repair(sched, scheme, failed)
+    hashes = (0, 1)
+    assert toolkit.check_tables(sched, r, link_fail=failed, hashes=hashes,
+                                max_hops=32) == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheme=st.sampled_from(TA_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 10), U=st.integers(1, 3), p=st.floats(0.05, 0.5))
+def test_repaired_ta_tables_avoid_failed_links(scheme, seed, n, U, p):
+    sched = random_schedule(seed, n, T=1, U=U)
+    failed = _random_failed(seed ^ 0x5EED, n, p)
+    r = repair(sched, scheme, failed)
+    hashes = (0,) if scheme == "ksp" else (0, 1)
+    assert toolkit.check_tables(sched, r, link_fail=failed, hashes=hashes,
+                                max_hops=32) == []
+
+
+@settings(max_examples=15, deadline=None)
+@given(scheme=st.sampled_from(TO_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 9), T=st.integers(1, 4), p=st.floats(0.05, 0.4))
+def test_repair_golden_numpy_vs_jnp(scheme, seed, n, T, p):
+    sched = random_schedule(seed, n, T, 2)
+    failed = _random_failed(seed ^ 0xBEEF, n, p)
+    r_np = repair(sched, scheme, failed, impl="numpy")
+    r_j = repair(sched, scheme, failed, impl="jnp")
+    np.testing.assert_array_equal(r_np.tf_next, r_j.tf_next)
+    np.testing.assert_array_equal(r_np.tf_dep, r_j.tf_dep)
+    np.testing.assert_array_equal(r_np.inj_next, r_j.inj_next)
+    np.testing.assert_array_equal(r_np.inj_dep, r_j.inj_dep)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scheme=st.sampled_from(TO_NAMES + TA_NAMES), seed=st.integers(0, 2**16),
+       n=st.integers(4, 9), p=st.floats(0.05, 0.5))
+def test_fast_reroute_statically_sound(scheme, seed, n, p):
+    """Patched tables never reference a failed link and keep slot
+    contiguity, for every scheme (walks excluded: detours are
+    best-effort)."""
+    from invariant_cases import SCHEME_BY_NAME
+    T = 1 if scheme in TA_NAMES else 3
+    sched = random_schedule(seed, n, T, 2)
+    failed = _random_failed(seed ^ 0xF00D, n, p)
+    alg, _hashes = SCHEME_BY_NAME[scheme]
+    patched = fast_reroute(alg(sched), sched, failed)
+    assert toolkit.check_tables(sched, patched, link_fail=failed,
+                                check_walks=False) == []

@@ -59,6 +59,20 @@ def test_device_scheduler_invariants(kind, scheme):
     run_case(scheme, scheduler_schedule(kind, seed=5, n=8))
 
 
+def test_paper_scale_108_tor_spot_check():
+    """Paper-scale invariant spot-check: the 108-ToR rotor cycle must
+    compile invariant-clean (with delivery) for the single-path TO schemes.
+    The walk sweep is vectorized over all src/dst pairs (~100x over the
+    scalar walker), which is what makes this feasible in the deterministic
+    suite; a handful of start slices spot-check the 107-slice cycle."""
+    from repro.core import direct, hoho
+    sched = round_robin(108, 1)
+    for alg in (hoho, direct):
+        bad = toolkit.check_tables(sched, alg(sched), t0s=(0, 1, 53, 106),
+                                   require_delivery=True, max_hops=32)
+        assert bad == [], (alg.__name__, bad[:3])
+
+
 def test_check_tables_flags_dark_circuit():
     """The checker must actually detect a broken table (not vacuously
     pass): an entry over a circuit the schedule never provides."""

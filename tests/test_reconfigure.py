@@ -37,11 +37,13 @@ def _workload(load=0.5, seed=3, max_packets=2000):
                       max_packets=max_packets, seed=seed)
 
 
-def _host_replay(wl, cfg, rcfg, epoch_conn):
+def _host_replay(wl, cfg, rcfg, epoch_conn, failures=None):
     """Replay a reconfigure run on the host: for each epoch, compile the
     recorded schedule with the *numpy* reference compiler and drive the same
     fabric step. Bit parity with the device loop pins measurement, schedule
-    derivation, and the on-device recompile at once."""
+    derivation, and the on-device recompile at once. With ``failures`` the
+    masks thread through the replayed fabric steps too (the recorded
+    ``epoch_conn`` already carries the heal-mode masking)."""
     E = rcfg.epoch_slices
     alg = HOST_ALG[rcfg.scheme]
     num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
@@ -51,6 +53,9 @@ def _host_replay(wl, cfg, rcfg, epoch_conn):
         t_inject=dev(wl.t_inject), flow=dev(wl.flow), seq=dev(wl.seq),
         is_eleph=dev(wl.is_eleph, jnp.bool_),
     )
+    if failures is not None:
+        base["link_cap"] = jnp.asarray(failures.link_cap, jnp.float32)
+        base["node_ok"] = jnp.asarray(failures.node_ok, jnp.bool_)
     state = None
     stats = []
     for e in range(rcfg.num_epochs):
@@ -202,6 +207,28 @@ def test_host_replay_parity(scheduler, scheme, kw):
                           scheduler=scheduler, **kw)
     res = reconfigure(sched, wl, cfg, rcfg)
     state, merged = _host_replay(wl, cfg, rcfg, res.epoch_conn)
+    _assert_replay_parity(res, state, merged)
+
+
+def test_host_replay_parity_heal():
+    """Detect -> repair epochs under a fault trace: replaying the recorded
+    (already failure-masked) epoch schedules through host-compiled tables
+    with the same masks must reproduce the self-healing device loop bit for
+    bit — this pins detection, the on-device surviving-adjacency recompile,
+    and the failure-aware fabric steps at once."""
+    from repro.core import FailureTrace, compile_masks
+    sched = round_robin(N_TORS, 1)
+    wl = _workload(load=0.8, seed=9)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=4, scheme="hoho",
+                          scheduler="hot_slices", k_hot=2, heal=True)
+    masks = compile_masks(
+        FailureTrace().link_flap(2, 5, 10).tor_outage(6, 20, 40),
+        sched, 48)
+    res = reconfigure(sched, wl, cfg, rcfg, failures=masks)
+    assert (res.failed_links > 0).any()
+    state, merged = _host_replay(wl, cfg, rcfg, res.epoch_conn,
+                                 failures=masks)
     _assert_replay_parity(res, state, merged)
 
 

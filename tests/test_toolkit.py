@@ -116,3 +116,87 @@ def test_module_docstring_example_runs():
     sched = rr(8, 1)
     out = toolkit.trace_packet(sched, hh(sched), src=0, dst=5, t0=0)
     assert isinstance(out, str) and out
+
+
+# ---------------------------------------------------------------------------
+# the vectorized walk sweep must match the scalar reference walk exactly
+# ---------------------------------------------------------------------------
+
+
+def _scalar_walk_sweep(sched, routing, hashes, max_hops, require_delivery,
+                       max_steps, link_fail=None):
+    """The pre-vectorization nested-loop sweep, kept as the reference: one
+    scalar ``_check_walk`` per (src, dst, t0, hash)."""
+    import math
+    bad = []
+    N = sched.num_nodes
+    cycle = math.lcm(sched.num_slices, routing.num_slices)
+    for src in range(N):
+        for dst in range(N):
+            if src == dst:
+                continue
+            for t0 in range(cycle):
+                for hashv in hashes:
+                    msg = toolkit._check_walk(sched, routing, src, dst, t0,
+                                              hashv, max_hops,
+                                              require_delivery, max_steps,
+                                              link_fail)
+                    if msg:
+                        bad.append(msg)
+    return bad
+
+
+def _vec_walks(sched, routing, hashes, max_hops, require_delivery,
+               max_steps, link_fail=None):
+    viol = toolkit._check_walks_vec(sched, routing, hashes, max_hops,
+                                    require_delivery, max_steps, link_fail,
+                                    range(np.lcm(sched.num_slices,
+                                                 routing.num_slices)))
+    return [toolkit._check_walk(sched, routing, s, d, t0, h, max_hops,
+                                require_delivery, max_steps, link_fail)
+            for s, d, t0, h in viol]
+
+
+def test_vectorized_walks_match_scalar_reference():
+    """Random schedules x schemes, clean and deliberately broken tables:
+    the vectorized sweep must report exactly the scalar sweep's messages,
+    in the same order."""
+    from repro.core import direct, ksp, ucmp
+    rng = np.random.default_rng(0)
+    cases = []
+    for seed in range(4):
+        n = int(rng.integers(4, 8))
+        T = int(rng.integers(1, 5))
+        conn = rng.integers(0, n, size=(T, n, 2)).astype(np.int32)
+        conn = np.where(conn == np.arange(n, dtype=np.int32)[None, :, None],
+                        (conn + 1) % n, conn)
+        dark = rng.random(size=conn.shape) > 0.7
+        sched = Schedule(np.where(dark, np.int32(-1), conn))
+        cases.append((sched, ucmp(sched), (0, 1, 2), False))
+        cases.append((sched, hoho(sched), (0,), True))
+    # broken tables: dark-circuit rides, loops, and failed links
+    sched = round_robin(6, 1)
+    r = hoho(sched)
+    r.tf_next[0, 0, 3, 0] = 2
+    r.tf_dep[0, 0, 3, 0] = 0
+    cases.append((sched, r, (0, 1), True))
+    fail = np.zeros((6, 6), bool)
+    fail[0, 1] = fail[2, 3] = True
+    for sched_c, routing, hashes, req in cases:
+        ref = _scalar_walk_sweep(sched_c, routing, hashes, 16, req, 64)
+        got = _vec_walks(sched_c, routing, hashes, 16, req, 64)
+        assert got == ref
+    # link_fail threading
+    ref = _scalar_walk_sweep(sched, hoho(sched), (0,), 16, False, 64, fail)
+    got = _vec_walks(sched, hoho(sched), (0,), 16, False, 64, fail)
+    assert got == ref and any("failed link" in m for m in got)
+
+
+def test_check_tables_t0_subset():
+    """``t0s`` restricts the start slices swept (the 108-ToR spot-check
+    path) without changing the verdict on clean tables."""
+    sched = round_robin(8, 1)
+    r = hoho(sched)
+    assert toolkit.check_tables(sched, r, t0s=(0, 3)) == []
+    bad_full = toolkit.check_tables(sched, r)
+    assert bad_full == []

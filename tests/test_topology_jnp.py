@@ -166,6 +166,44 @@ def test_schedulers_are_jittable():
         np.asarray(topology_jnp.bvn_conn(tm, num_slices=6, max_perms=4)))
 
 
+def test_bvn_perm_found_counts_effective_depth():
+    """``perm_found`` marks the peels that covered positive residual
+    support: a permutation TM needs exactly one, and the padding peels
+    past the effective depth are reported un-found."""
+    rng = np.random.default_rng(2)
+    n = 8
+    perm = _derangement(rng, n)
+    tm = np.zeros((n, n))
+    tm[np.arange(n), perm] = rng.random(n) * 9 + 1
+    conn, found = topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=8,
+                                        max_perms=6, with_info=True)
+    found = np.asarray(found)
+    assert found.shape == (6,)
+    assert found[0] and not found[1:].any()
+    # the schedule itself is unchanged by with_info
+    np.testing.assert_array_equal(
+        np.asarray(conn),
+        np.asarray(topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=8,
+                                         max_perms=6)))
+
+
+def test_bvn_perm_found_dense_tm_uses_budget():
+    """A dense random TM decomposes past a single permutation: several
+    peels carry support, and found peels come before un-found ones."""
+    rng = np.random.default_rng(4)
+    n = 8
+    tm = rng.random((n, n)) * 50
+    np.fill_diagonal(tm, 0)
+    _, found = topology_jnp.bvn_conn(jnp.asarray(tm), num_slices=12,
+                                     max_perms=8, with_info=True)
+    found = np.asarray(found)
+    assert found.sum() >= 2
+    # once the residual dead-ends, it stays dead-ended
+    if (~found).any():
+        first_dead = int(np.argmax(~found))
+        assert not found[first_dead:].any()
+
+
 def test_sinkhorn_normalizes():
     rng = np.random.default_rng(1)
     tm = rng.random((7, 7)) * 100
