@@ -12,12 +12,22 @@ Tracked rows (``--json`` writes ``BENCH_fig_failover.json``):
 
 * ``failover_degraded[v]``   — post-fault slices with windowed delivery
                                below 80% of the healthy run's (recovery-
-                               time proxy; us = simulate wall time)
+                               time proxy; us = *warm* simulate wall time
+                               — compiles are paid outside the timer so
+                               the CI bench gate compares compute, not
+                               XLA compile variance; the cold ``heal``
+                               row is the one exception)
 * ``failover_delivered[v]``  — delivered packet fraction (the hot pair is
                                offered ~1.2x its direct circuit, so losing
                                it shows up here, not only in latency)
 * ``failover_lat_p99[v]``    — p99 packet latency (us) of delivered
                                packets under failure
+
+Variants: ``oblivious``, ``frr``, ``heal`` (cold, includes the
+reconfigure-loop compile; full runs only) and ``heal_warm`` (cached-jit —
+the compile is warmed outside the timer, so the variant is cheap enough
+for quick CI mode: its wall time is gated per PR and the recovery
+metrics are printed in the gate output for review).
 """
 from __future__ import annotations
 
@@ -84,19 +94,31 @@ def run(quick: bool = False):
     routing = hoho(sched)
     tables = FabricTables.build(sched, routing)
 
+    # every variant is timed warm (its jit compile paid by an untimed call
+    # first): the rows' tracked value is the derived recovery metrics, and
+    # warm wall time is comparable across runners — cold numbers were
+    # ~95% XLA compile and would flake the CI bench gate
+    simulate(tables, wl, cfg, S)
     healthy, _ = timed(simulate, tables, wl, cfg, S)
     variants = {}
+    simulate(tables, wl, cfg, S, masks)
     variants["oblivious"] = timed(simulate, tables, wl, cfg, S, masks)
     # fast reroute patches the tables at the instant of detection (t_fail);
     # simulate_phased carries the packet state across the hot swap
     frr = fast_reroute(routing, sched, masks.failed_links(t_fail))
-    variants["frr"] = timed(
-        simulate_phased, sched, [(routing, t_fail), (frr, S - t_fail)],
-        wl, cfg, masks)
+    phases = [(routing, t_fail), (frr, S - t_fail)]
+    simulate_phased(sched, phases, wl, cfg, masks)
+    variants["frr"] = timed(simulate_phased, sched, phases, wl, cfg, masks)
+    rcfg = ReconfigConfig(epoch_slices=EPOCH_SLICES, num_epochs=epochs,
+                          scheme="hoho", k_hot=0, heal=True)
     if not quick:
-        rcfg = ReconfigConfig(epoch_slices=EPOCH_SLICES, num_epochs=epochs,
-                              scheme="hoho", k_hot=0, heal=True)
+        # cold row: includes the reconfigure-loop compile (the historical
+        # tracked number; full runs only, not gated)
         variants["heal"] = timed(reconfigure, sched, wl, cfg, rcfg, masks)
+    # cached-jit heal (ROADMAP ISSUE-4 leftover): warm enough for quick CI
+    # mode, so the self-heal row runs (timing gated, metrics printed) per PR
+    reconfigure(sched, wl, cfg, rcfg, masks)
+    variants["heal_warm"] = timed(reconfigure, sched, wl, cfg, rcfg, masks)
 
     rows = []
     for name, (res, us) in variants.items():

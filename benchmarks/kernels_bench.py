@@ -17,7 +17,7 @@ from repro.kernels import ops
 from repro.core import (FabricConfig, FabricTables, ReconfigConfig, direct,
                         reconfigure, round_robin, synthesize, ucmp)
 from repro.core import routing_jnp, topology_jnp
-from repro.core.fabric import simulate
+from repro.core.fabric import _group_admit, simulate
 from .common import timed
 
 
@@ -29,6 +29,18 @@ def _bench(fn, *args, iters=5, **kw):
         out = fn(*args, **kw)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6
+
+
+def _best_of(fn, reps=3):
+    """Best-of-``reps`` wall time (seconds) for an already-warm nullary
+    call: the whole-simulate rows are single long calls whose run-to-run
+    scheduler noise would otherwise dwarf the CI gate tolerance."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
 
 
 def run(quick: bool = False):
@@ -45,6 +57,27 @@ def run(quick: bool = False):
     f = jax.jit(lambda *a: ops.time_flow_lookup(*a, impl="ref"))
     us = _bench(f, tbl_n, tbl_d, node, dst, h)
     rows.append(("kern_tfl_ref_32kpkt", us, f"{P/us:.0f}pkt/us"))
+
+    # queue admission at the ISSUE-1 acceptance shape (P = 2^15, the full
+    # 108-ToR key space): the XLA stable-sort + segmented-prefix path the
+    # fabric runs per slice, vs the sort-free Pallas admission kernel.
+    # The interpret-mode kernel row measures Python dispatch only (like the
+    # attention row); the meaningful CPU number is admit_xla_p15, the cost
+    # the kernel removes on TPU.
+    NKEY = 108 * 109
+    akey = jnp.asarray(rng.integers(0, NKEY, P), jnp.int32)
+    asz = jnp.asarray(rng.integers(64, 1500, P), jnp.int32)
+    awant = jnp.asarray(rng.random(P) < 0.7)
+    acap = jnp.asarray(rng.integers(0, 150_000, NKEY), jnp.int32)
+    f_adm_x = jax.jit(lambda k, s, w, c: _group_admit(k, s, w, c, NKEY))
+    us = _bench(f_adm_x, akey, asz, awant, acap)
+    rows.append(("admit_xla_p15", us, f"{P/us:.0f}pkt/us"))
+    if not quick:
+        f_adm_p = jax.jit(lambda k, s, w, c: ops.admission_admit(
+            k, s, w, c, num_keys=NKEY))
+        us = _bench(f_adm_p, akey, asz, awant, acap, iters=2)
+        rows.append(("admit_pallas_p15", us,
+                     "interpret-mode (dispatch cost only)"))
 
     # flash attention oracle vs naive jnp (CPU walltime, small shape)
     B, Hq, Hkv, L, hd = 1, 4, 2, 512, 64
@@ -145,21 +178,36 @@ def run(quick: bool = False):
     cfg = FabricConfig(slice_bytes=10_000)
     S = 150
     simulate(tables, wl, cfg, S)  # warm compile
-    t0 = time.time()
-    simulate(tables, wl, cfg, S)
-    dt = time.time() - t0
+    dt = _best_of(lambda: simulate(tables, wl, cfg, S))
     rate = wl.num_packets * S / dt
     rows.append(("fabric_sim_rate", dt * 1e6, f"{rate/1e6:.2f}Mpkt-slice/s"))
 
-    # fabric simulator at P = 2^15 (the ISSUE-1 acceptance shape)
+    # push-back simulate under receiver-buffer pressure: the rx cut rejects
+    # every slice, so the push-back-aware backlog filter (ISSUE 5) decides
+    # how much of the packet vector later hops re-sort — these rows track
+    # that win (the filter was previously disabled under push-back)
+    wl_pb = synthesize("rpc", n2, 60, slice_bytes=10_000, load=4.0,
+                       max_packets=4000, seed=1)
+    cfg_pb = FabricConfig(slice_bytes=10_000, pushback=True,
+                          switch_buffer=16_000)
+    S_pb = 60
+    simulate(tables, wl_pb, cfg_pb, S_pb)  # warm compile
+    dt = _best_of(lambda: simulate(tables, wl_pb, cfg_pb, S_pb))
+    rows.append(("fabric_sim_pushback", dt * 1e6,
+                 f"{wl_pb.num_packets*S_pb/dt/1e6:.2f}Mpkt-slice/s"))
+
+    # fabric simulator at P = 2^15 (the ISSUE-1 acceptance shape), plain
+    # and under push-back (where the rx backlog filter carries the load)
     if not quick:
         wl2 = synthesize("rpc", n2, 60, slice_bytes=10_000, load=4.0,
                          max_packets=1 << 15, seed=1)
         simulate(tables, wl2, cfg, S)  # warm compile
-        t0 = time.time()
-        simulate(tables, wl2, cfg, S)
-        dt = time.time() - t0
+        dt = _best_of(lambda: simulate(tables, wl2, cfg, S))
         rate = wl2.num_packets * S / dt
         rows.append(("fabric_sim_rate_32k", dt * 1e6,
                      f"{rate/1e6:.2f}Mpkt-slice/s"))
+        simulate(tables, wl2, cfg_pb, S_pb)  # warm compile
+        dt = _best_of(lambda: simulate(tables, wl2, cfg_pb, S_pb))
+        rows.append(("fabric_sim_pushback_32k", dt * 1e6,
+                     f"{wl2.num_packets*S_pb/dt/1e6:.2f}Mpkt-slice/s"))
     return rows

@@ -2,7 +2,30 @@
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` runs reduced settings.
 ``--json`` additionally writes ``BENCH_<module>.json`` (name -> us/derived)
 to the repo root so the perf trajectory is tracked across PRs (quick runs
-write ``BENCH_<module>.quick.json`` to keep the baseline comparable)."""
+write ``BENCH_<module>.quick.json`` to keep the baseline comparable).
+
+``--check`` is the CI bench-regression gate: it runs each module in quick
+mode ``--repeat`` times, takes the per-row *minimum* of ``us_per_call``
+(minimum, not median: wall-clock noise on shared runners is strictly
+additive, so the fastest repeat is the best estimate of the true cost),
+and compares it against the committed full-run baseline
+``BENCH_<module>.json`` with a per-row tolerance (``--tol``, default
+1.3x). Quick settings are never *larger* than the full run's, so a quick
+minimum exceeding ``tol x baseline`` is a genuine slowdown — the gate
+exits non-zero and lists the offending rows. Rows whose names only exist
+at full settings (e.g. ``route_ucmp_compile_108`` vs the quick ``_32``)
+are skipped; rows not yet in the baseline are reported as unbaselined but
+do not fail.
+
+To intentionally re-baseline after a deliberate perf change::
+
+    PYTHONPATH=src python -m benchmarks.run --json --only kernels_bench
+    PYTHONPATH=src python -m benchmarks.run --json --only fig_failover
+    git add BENCH_kernels_bench.json BENCH_fig_failover.json
+
+and commit the refreshed JSON together with the change that explains it
+(see also the benchmark table in README.md).
+"""
 from __future__ import annotations
 
 import argparse
@@ -29,6 +52,58 @@ MODULES = [
 ]
 
 
+def _run_module(name: str, quick: bool):
+    mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+    return list(mod.run(quick=quick))
+
+
+def _check(mods: list[str], tol: float, repeat: int) -> int:
+    """Quick-run minima vs committed full baselines; 0 iff no regression."""
+    failed = False
+    for name in mods:
+        base_path = REPO_ROOT / f"BENCH_{name}.json"
+        if not base_path.exists():
+            print(f"# {name}: no committed baseline ({base_path.name}), "
+                  "skipping", file=sys.stderr)
+            continue
+        baseline = json.loads(base_path.read_text())
+        samples: dict[str, list[float]] = {}
+        derived: dict[str, str] = {}
+        for _ in range(repeat):
+            for n, us, d in _run_module(name, quick=True):
+                samples.setdefault(n, []).append(us)
+                derived[n] = str(d)
+        print(f"# {name}: gate vs {base_path.name} (tol {tol:g}x, "
+              f"min of {repeat})")
+        for n, vals in samples.items():
+            best = min(vals)
+            if n not in baseline:
+                print(f"{n},{best:.1f},unbaselined ({derived[n]})")
+                continue
+            ref = float(baseline[n]["us_per_call"])
+            verdict = "ok" if best <= tol * ref else "REGRESSION"
+            # derived metrics (e.g. failover recovery slices) are printed
+            # for per-PR visibility but not compared: quick settings
+            # legitimately change them (shorter runs, fewer epochs) — only
+            # wall time has a sound one-sided quick-vs-full comparison
+            print(f"{n},{best:.1f},{verdict} vs {ref:.1f} "
+                  f"({best/max(ref, 1e-9):.2f}x) [{derived[n]}]")
+            if verdict != "ok":
+                failed = True
+        missing = [n for n in baseline if n not in samples]
+        if missing:
+            print(f"# {name}: baseline rows not produced at quick settings "
+                  f"(skipped): {missing}", file=sys.stderr)
+    if failed:
+        print("# BENCH REGRESSION: quick minimum exceeded tolerance; if the "
+              "slowdown is intentional, re-baseline with "
+              "`python -m benchmarks.run --json --only <module>` and commit "
+              "the refreshed BENCH_*.json (see benchmarks/run.py docstring).",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -36,15 +111,23 @@ def main() -> None:
                     help="comma-separated module subset")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json to the repo root")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: quick-run minima vs committed "
+                         "BENCH_<module>.json baselines; exit 1 on regression")
+    ap.add_argument("--tol", type=float, default=1.3,
+                    help="per-row tolerance factor for --check (default 1.3)")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="quick runs per module for the --check minimum")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
+    if args.check:
+        sys.exit(_check(mods, args.tol, args.repeat))
     print("name,us_per_call,derived")
     failed = []
     for name in mods:
         try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             rows = []
-            for row in mod.run(quick=args.quick):
+            for row in _run_module(name, quick=args.quick):
                 n, us, derived = row
                 rows.append((n, us, derived))
                 print(f"{n},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,56 @@
+"""Nightly paper-scale invariant sweep: compile every routing scheme at
+108 ToRs and run :func:`repro.core.toolkit.check_tables` over the *full*
+combined schedule cycle, walks included (the vectorized walk checker makes
+this ~seconds per scheme; the deterministic tier-1 suite only spot-checks a
+handful of start slices — ROADMAP ISSUE-3/4 leftover).
+
+TO schemes sweep the 108-ToR round-robin rotor cycle (T = 107); TA schemes
+wildcard time and sweep a single-slice 108-node instance from the device
+matching scheduler. Exits non-zero with the narrated violations on any
+failure. Usage::
+
+    PYTHONPATH=src python scripts/full_cycle_sweep.py [--n 108]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, "tests")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=108, help="ToR count")
+    args = ap.parse_args()
+
+    from repro.core import round_robin, toolkit
+    from invariant_cases import TA_SCHEMES, TO_SCHEMES, scheduler_schedule
+
+    n = args.n
+    rotor = round_robin(n, 1)
+    ta_inst = scheduler_schedule("edmonds", seed=0, n=n)
+    failures = 0
+    for name, alg, hashes in TO_SCHEMES + TA_SCHEMES:
+        sched = rotor if (name, alg, hashes) in TO_SCHEMES else ta_inst
+        t0 = time.time()
+        routing = alg(sched)
+        t_compile = time.time() - t0
+        t0 = time.time()
+        bad = toolkit.check_tables(sched, routing, max_hops=32,
+                                   hashes=hashes)
+        t_check = time.time() - t0
+        status = "ok" if not bad else f"{len(bad)} VIOLATIONS"
+        print(f"{name:8s} n={n} T={sched.num_slices:4d} "
+              f"compile={t_compile:6.1f}s check={t_check:6.1f}s {status}",
+              flush=True)
+        for msg in bad[:10]:
+            print(f"  {msg}", file=sys.stderr)
+        failures += bool(bad)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

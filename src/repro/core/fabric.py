@@ -50,9 +50,20 @@ kept in ``tests/fabric_ref.py``):
   shrinks within a slice, so a packet positioned at or after the first
   rejected index of its group can never be admitted in a later hop. Hop 0
   records the minimum rejected index per group; hops >= 1 only re-sort the
-  cut-through continuations (push-back re-scans everything: rx filtering
-  breaks the monotonicity argument). This is what makes the packet vector
-  effectively *sorted once per slice*.
+  cut-through continuations. This is what makes the packet vector
+  effectively *sorted once per slice*. Under push-back the capacity
+  argument is weakened (an rx candidate that later flips to rx-rejected
+  removes its bytes from successors' capacity prefixes), but two rx-aware
+  cuts survive and are applied instead: receivers' rx rejections are
+  themselves a monotone FIFO prefix cut (room shrinks at least as fast as
+  any candidate's rx prefix), and electrical groups are rx-exempt
+  wholesale, so their capacity cut stands (ISSUE 5; bit-identity vs the
+  unfiltered reference enforced by the fabric goldens).
+* **Admission itself is a swappable backend** (``FabricConfig.admit_impl``):
+  the XLA stable-sort + segmented-prefix formulation, or the sort-free
+  Pallas kernel (:mod:`repro.kernels.admission`) that carries a per-key
+  byte accumulator across packet tiles — bit-identical, selected exactly
+  like ``lookup_impl``.
 * **The injection and deferred-re-lookup table lookups are fused** into one
   gather over stacked (injection, transit) tables; the transit lookup inside
   the hop body is the third and only other lookup site.
@@ -70,6 +81,7 @@ import jax.numpy as jnp
 
 from .routing import CompiledRouting, first_direct_offsets
 from .topology import Schedule
+from ..kernels.admission import admission_admit
 from ..kernels.time_flow_lookup import time_flow_lookup
 
 __all__ = ["FabricConfig", "Workload", "FabricTables", "simulate", "SimResult"]
@@ -107,6 +119,15 @@ class FabricConfig:
         default), "pallas" (TPU kernel), "pallas-interpret" (kernel body on
         CPU for validation). All three are bit-identical; see
         :mod:`repro.kernels.time_flow_lookup`.
+    admit_impl: queue-admission backend — "xla" (stable-sort + segmented
+        prefix-sum, default), "pallas" (the sort-free TPU kernel),
+        "pallas-interpret" (kernel body on CPU for validation). All three
+        are bit-identical; see :mod:`repro.kernels.admission`. Every
+        admission site routes through this knob: the per-slice capacity cut
+        and the push-back receiver-buffer cut in :func:`_make_step`, the
+        epoch scan of :func:`repro.core.reconfigure.reconfigure`, and the
+        failure-masked capacity recompute (``failures=``) — they all call
+        :func:`_admit`.
 
     Failure state is *data*, not static config: per-slice fault masks
     (:class:`repro.core.failures.FailureMasks`) enter through
@@ -127,6 +148,7 @@ class FabricConfig:
     flow_pausing: bool = False       # hold elephants for direct circuits (§5.2)
     congestion_threshold: int = 1 << 30  # classic CC threshold, bytes per queue
     lookup_impl: str = "jnp"         # "jnp" | "pallas" (TPU) | "pallas-interpret"
+    admit_impl: str = "xla"          # "xla" | "pallas" (TPU) | "pallas-interpret"
 
 
 @dataclasses.dataclass
@@ -232,7 +254,8 @@ def _lookup(next_tbl, dep_tbl, t, node, dst, hashv, impl: str = "jnp"):
 
 
 def _group_admit(key, size, want, cap_left, num_keys):
-    """Deterministic FIFO admission under per-key capacity.
+    """Deterministic FIFO admission under per-key capacity (XLA backend:
+    stable sort by key + segmented prefix-sum over the sorted order).
 
     Packets are processed in index order within each key group; a packet is
     admitted if the group's running byte count still fits ``cap_left[key]``.
@@ -256,6 +279,17 @@ def _group_admit(key, size, want, cap_left, num_keys):
     return admitted, used
 
 
+def _group_admit_impl(key, size, want, cap_left, num_keys, impl: str):
+    """The swappable admission backend boundary: ``"xla"`` is the
+    stable-sort formulation above; ``"pallas"``/``"pallas-interpret"`` run
+    the sort-free segmented-prefix kernel
+    (:func:`repro.kernels.admission.admission_admit` — bit-identical)."""
+    if impl == "xla":
+        return _group_admit(key, size, want, cap_left, num_keys)
+    return admission_admit(key, size, want, cap_left, num_keys=num_keys,
+                           interpret=(impl != "pallas"))
+
+
 # Compact-path population bounds: when at most this many packets are active in
 # a phase, the phase runs on a gathered C-sized view of the packet vector
 # (sorting/scattering C elements) instead of all P. ``lax.cond`` falls back to
@@ -271,7 +305,7 @@ def _compact_idx(mask, C):
     return jnp.searchsorted(cm, jnp.arange(1, C + 1, dtype=jnp.int32))
 
 
-def _group_admit_small(key, size, want, cap_left, num_keys, C):
+def _group_admit_small(key, size, want, cap_left, num_keys, C, impl="xla"):
     """FIFO admission on the compacted want-set: identical results to
     :func:`_group_admit` whenever ``sum(want) <= C`` (compaction preserves
     index order, so per-group FIFO prefixes are unchanged)."""
@@ -281,20 +315,23 @@ def _group_admit_small(key, size, want, cap_left, num_keys, C):
     ic = jnp.clip(idx, 0, P - 1)
     kc = jnp.where(ok, key[ic], num_keys)
     sc = jnp.where(ok, size[ic], 0)
-    adm_c, used = _group_admit(kc, sc, ok, cap_left, num_keys)
+    adm_c, used = _group_admit_impl(kc, sc, ok, cap_left, num_keys, impl)
     admitted = jnp.zeros((P,), bool).at[idx].set(adm_c, mode="drop")
     return admitted, used
 
 
-def _admit(key, size, want, cap_left, num_keys, C=ADMIT_C):
-    """Dispatch between the compact and full admission paths."""
+def _admit(key, size, want, cap_left, num_keys, C=ADMIT_C, impl="xla"):
+    """Dispatch between the compact and full admission paths; ``impl``
+    (``FabricConfig.admit_impl``) selects the backend inside both."""
     P = key.shape[0]
     if P <= C:
-        return _group_admit(key, size, want, cap_left, num_keys)
+        return _group_admit_impl(key, size, want, cap_left, num_keys, impl)
     return jax.lax.cond(
         jnp.sum(want) <= C,
-        lambda _: _group_admit_small(key, size, want, cap_left, num_keys, C),
-        lambda _: _group_admit(key, size, want, cap_left, num_keys),
+        lambda _: _group_admit_small(key, size, want, cap_left, num_keys, C,
+                                     impl),
+        lambda _: _group_admit_impl(key, size, want, cap_left, num_keys,
+                                    impl),
         None)
 
 
@@ -365,6 +402,9 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
     if cfg.lookup_impl not in ("jnp", "pallas", "pallas-interpret"):
         raise ValueError(f"unknown lookup_impl {cfg.lookup_impl!r}: expected "
                          "'jnp', 'pallas', or 'pallas-interpret'")
+    if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
+        raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
+                         "'xla', 'pallas', or 'pallas-interpret'")
     T, N, U = tables.conn.shape
     dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
     j = dict(
@@ -643,7 +683,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
         used = jnp.zeros((NKEY,), jnp.int32)
         buf_now = on_switch_bytes(s["occ"])
 
-        def hop_logic(s, v, used, buf_now, backlog_min):
+        def hop_logic(s, v, used, buf_now, backlog_min, rx_backlog_min):
             want = v["active"]
             if has_fail:
                 # the electrical fabric cannot terminate at a down ToR;
@@ -657,23 +697,49 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 need_buf = want & (v["nxt"] < N) & (v["nxt"] != v["dst"])
                 room = jnp.maximum(cfg.switch_buffer - buf_now, 0)
                 adm_rx, _ = _admit(jnp.clip(v["nxt"], 0, N - 1), v["size"],
-                                   need_buf, room, N)
+                                   need_buf, room, N, impl=cfg.admit_impl)
+                # rx rejections are monotone within the slice: the rx cut is
+                # a FIFO prefix per receiver, a receiver's room only shrinks
+                # (buf_now only receives arrivals), and a candidate's rx
+                # prefix can drop only by bytes of earlier same-receiver
+                # packets that transmitted — each of which arrived at that
+                # receiver, shrinking room by at least as much. The first
+                # rx-rejected index per receiver therefore poisons its whole
+                # suffix for the rest of the slice.
+                rej_rx = need_buf & ~adm_rx
+                rx_backlog_min = rx_backlog_min.at[
+                    jnp.where(rej_rx, jnp.clip(v["nxt"], 0, N - 1), 0)].min(
+                    jnp.where(rej_rx, v["gidx"], P))
                 want &= adm_rx | ~need_buf
             key = jnp.clip(v["loc"], 0, N - 1) * (N + 1) + jnp.clip(v["nxt"], 0, N)
-            admitted, consumed = _admit(key, v["size"], want, caps - used, NKEY)
+            admitted, consumed = _admit(key, v["size"], want, caps - used,
+                                        NKEY, impl=cfg.admit_impl)
             used = used + consumed
             # Rejected packets form the slice's backlog: admission is a
             # cumulative-prefix cut per group and capacities only shrink, so a
             # packet positioned after a rejected one in its group can never be
             # admitted later this slice. Remember the minimum rejected index
             # per group; later hops drop those provably-rejected candidates.
-            # (Push-back breaks the monotonicity argument — rx-filtering can
-            # remove predecessor bytes from the capacity prefix — so the
-            # filter is only applied without it.)
             if not cfg.pushback:
                 rejected = v["active"] & ~admitted
                 backlog_min = backlog_min.at[jnp.where(rejected, key, 0)].min(
                     jnp.where(rejected, v["gidx"], P))
+            elif cfg.elec_bytes > 0:
+                # Under push-back the capacity argument survives only for
+                # groups the rx cut can never touch: a packet whose earlier
+                # same-group bytes include an rx-*subject* candidate can be
+                # "rescued" when that candidate later flips to rx-rejected
+                # and its bytes leave the capacity prefix. Electrical groups
+                # (loc, N) are rx-exempt wholesale (need_buf requires
+                # nxt < N), their members contribute to no rx prefix, and
+                # their first *wanted* rejected index poisons the suffix
+                # exactly as in the unfiltered program — so the capacity
+                # filter stays sound for them (and only them). Without an
+                # electrical fabric there are no such groups to cut, so the
+                # bookkeeping is skipped statically.
+                rej_elec = want & ~admitted & (v["nxt"] == N)
+                backlog_min = backlog_min.at[jnp.where(rej_elec, key, 0)].min(
+                    jnp.where(rej_elec, v["gidx"], P))
             is_elec = admitted & (v["nxt"] == N)
             moved = admitted & ~is_elec
             newloc = jnp.where(moved, v["nxt"], v["loc"])
@@ -735,45 +801,62 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_t),
                                            v["size"], arrived & (off_t > 0))
             s, v = enqueue_checks(s, v, arrived, jnp.where(in_transit, off_t, 0))
-            return s, v, used, buf_now, backlog_min
+            return s, v, used, buf_now, backlog_min, rx_backlog_min
 
         backlog_min = jnp.full((NKEY,), P, jnp.int32)
+        rx_backlog_min = jnp.full((N,), P, jnp.int32)
         for _hop in range(cfg.hops_per_slice):
             want0 = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
                     (s["nhops"] < cfg.max_hops)
+            key_all = jnp.clip(s["loc"], 0, N - 1) * (N + 1) + \
+                jnp.clip(s["nxt"], 0, N)
             if not cfg.pushback:
-                key_all = jnp.clip(s["loc"], 0, N - 1) * (N + 1) + \
-                    jnp.clip(s["nxt"], 0, N)
                 want0 &= pid < backlog_min[key_all]
+            else:
+                # push-back-aware backlog filter: drop candidates at-or-after
+                # a receiver's first rx-rejected index (rx rejection is
+                # monotone — see hop_logic), and electrical candidates
+                # at-or-after their rx-exempt group's first capacity
+                # rejection. Optical capacity rejections stay unfiltered:
+                # their prefixes can lose bytes to later rx flips.
+                rx_subject = (s["nxt"] >= 0) & (s["nxt"] < N) & \
+                    (s["nxt"] != j["dst"])
+                want0 &= ~(rx_subject &
+                           (pid >= rx_backlog_min[jnp.clip(s["nxt"], 0, N - 1)]))
+                if cfg.elec_bytes > 0:
+                    want0 &= ~((s["nxt"] == N) & (pid >= backlog_min[key_all]))
             cnt0 = jnp.sum(want0)
 
             def hop_full(carry, want0=want0):
-                s, used, buf_now, backlog_min = carry
+                s, used, buf_now, backlog_min, rx_backlog_min = carry
                 v, idx = make_view(s, HOP_FIELDS, None,
                                    dict(active=want0), None)
                 v["gidx"] = pid
-                s, v, used, buf_now, backlog_min = hop_logic(
-                    dict(s), v, used, buf_now, backlog_min)
-                return write_view(s, v, HOP_FIELDS, idx), used, buf_now, backlog_min
+                s, v, used, buf_now, backlog_min, rx_backlog_min = hop_logic(
+                    dict(s), v, used, buf_now, backlog_min, rx_backlog_min)
+                return (write_view(s, v, HOP_FIELDS, idx), used, buf_now,
+                        backlog_min, rx_backlog_min)
 
             def hop_compact(C, want0=want0):
                 def fn(carry, C=C, want0=want0):
-                    s, used, buf_now, backlog_min = carry
+                    s, used, buf_now, backlog_min, rx_backlog_min = carry
                     v, idx = make_view(s, HOP_FIELDS, want0, {}, C)
                     v["active"] = v.pop("_ok")
                     v["gidx"] = jnp.minimum(idx, P).astype(jnp.int32)
-                    s, v, used, buf_now, backlog_min = hop_logic(
-                        dict(s), v, used, buf_now, backlog_min)
-                    return write_view(s, v, HOP_FIELDS, idx), used, buf_now, backlog_min
+                    s, v, used, buf_now, backlog_min, rx_backlog_min = \
+                        hop_logic(dict(s), v, used, buf_now, backlog_min,
+                                  rx_backlog_min)
+                    return (write_view(s, v, HOP_FIELDS, idx), used, buf_now,
+                            backlog_min, rx_backlog_min)
                 return fn
 
             hop_fn = hop_full
             for c in TIERS[::-1]:
                 hop_fn = (lambda carry, cc=c, inner=hop_fn:
                           jax.lax.cond(cnt0 <= cc, hop_compact(cc), inner, carry))
-            s, used, buf_now, backlog_min = jax.lax.cond(
+            s, used, buf_now, backlog_min, rx_backlog_min = jax.lax.cond(
                 cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
-                (s, used, buf_now, backlog_min))
+                (s, used, buf_now, backlog_min, rx_backlog_min))
 
         # -- 4. handle packets that missed their slice ----------------------
         missed = (s["loc"] >= 0) & (s["dep"] == t)

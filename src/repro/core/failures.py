@@ -54,6 +54,7 @@ Networks: Understanding Techniques and Challenges*). Three layers:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -433,6 +434,34 @@ def fast_reroute(routing: CompiledRouting, sched: Schedule,
                            weights=routing.weights)
 
 
+_PHASE_SCAN = None
+
+
+def _get_phase_scan():
+    """The jitted per-phase fabric scan of :func:`simulate_phased`, built
+    lazily (this module stays importable without touching jax) and cached
+    at module scope so repeated phased runs reuse the compile."""
+    global _PHASE_SCAN
+    if _PHASE_SCAN is None:
+        import jax
+        import jax.numpy as jnp
+
+        from .fabric import _make_step
+
+        @functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
+        def _phase_scan(j, state, cfg, per_packet_mp, num_flows, n_slices,
+                        t0):
+            # one jitted program per (shape, cfg, phase length); without
+            # this the scan dispatches eagerly op-by-op and a 150-slice
+            # phase takes tens of seconds instead of milliseconds
+            step = _make_step(j, cfg, per_packet_mp, num_flows)
+            return jax.lax.scan(
+                step, state, t0 + jnp.arange(n_slices, dtype=jnp.int32))
+
+        _PHASE_SCAN = _phase_scan
+    return _PHASE_SCAN
+
+
 def simulate_phased(sched: Schedule, phases, wl, cfg, failures=None):
     """Run the fabric through consecutive phases with different deployed
     tables, carrying the packet state across each swap — the host-driven
@@ -446,10 +475,11 @@ def simulate_phased(sched: Schedule, phases, wl, cfg, failures=None):
     With a single phase the result is bit-identical to
     :func:`repro.core.fabric.simulate`.
     """
-    import jax
     import jax.numpy as jnp
 
-    from .fabric import FabricTables, SimResult, _init_state, _make_step
+    from .fabric import FabricTables, SimResult, _init_state
+
+    _phase_scan = _get_phase_scan()
 
     total = sum(s for _, s in phases)
     N = sched.num_nodes
@@ -475,9 +505,9 @@ def simulate_phased(sched: Schedule, phases, wl, cfg, failures=None):
                  first_direct=dev(tables.first_direct))
         if state is None:
             state = _init_state(j, num_flows)
-        step = _make_step(j, cfg, tables.multipath == "packet", num_flows)
-        state, ys = jax.lax.scan(
-            step, state, t0 + jnp.arange(n_slices, dtype=jnp.int32))
+        state, ys = _phase_scan(j, state, cfg,
+                                tables.multipath == "packet", num_flows,
+                                n_slices, jnp.int32(t0))
         stats.append(ys)
         t0 += n_slices
     merged = {k: np.concatenate([np.asarray(s[k]) for s in stats])

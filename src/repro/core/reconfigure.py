@@ -142,7 +142,10 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     ``"bvn"`` epochs cycle a ``rcfg.bvn_slices``-slice BvN schedule — both
     derived purely from the measured demand (the base cycle only fixes N and
     U). All TO schemes hash multipath per packet, and the table lookup runs
-    the plain-gather backend inside the epoch scan.
+    the plain-gather backend inside the epoch scan
+    (``cfg.admit_impl`` *is* honored: the queue-admission backend — XLA
+    sort or the Pallas kernel — has no host-side dependency, so it swaps
+    freely inside the scan; parity pinned by ``tests/test_admission.py``).
 
     ``failures`` (a :class:`repro.core.failures.FailureMasks` covering
     ``num_epochs * epoch_slices`` slices) threads fault state through the
@@ -159,6 +162,9 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     if cfg.lookup_impl != "jnp":
         raise ValueError("reconfigure() supports lookup_impl='jnp' only "
                          "(the Pallas lookup kernel is a per-deploy path)")
+    if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
+        raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
+                         "'xla', 'pallas', or 'pallas-interpret'")
     T0, N, U = sched.conn.shape
     # epoch-0 placeholder schedule (dark where demand-derived): fixes the
     # static epoch-cycle shape for the scan

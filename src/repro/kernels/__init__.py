@@ -7,7 +7,7 @@ shapes and dtypes against the oracles).
 """
 from . import ops, ref
 from .ops import (flash_attention, decode_attention, grouped_matmul, rg_lru,
-                  time_flow_lookup)
+                  time_flow_lookup, admission_admit)
 
 __all__ = ["ops", "ref", "flash_attention", "decode_attention",
-           "grouped_matmul", "rg_lru", "time_flow_lookup"]
+           "grouped_matmul", "rg_lru", "time_flow_lookup", "admission_admit"]

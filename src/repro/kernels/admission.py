@@ -1,0 +1,125 @@
+"""Queue-admission Pallas TPU kernel — the fabric's per-slice capacity cut.
+
+The data plane admits packets to circuits FIFO per (node, egress) group
+under per-group byte capacities (``repro.core.fabric._group_admit``). The
+XLA CPU formulation sorts the packet vector by group key and runs a
+segmented prefix-sum over the sorted order — the dominant remaining
+per-slice cost at P = 2^15 (~2 ms per P-wide scatter/sort; ROADMAP
+"next big dataplane win").
+
+This kernel removes the sort entirely. FIFO admission only needs, for each
+packet ``i``, the *in-index-order* segmented prefix
+
+    prefix[i] = sum of sizes of wanted packets j < i with key[j] == key[i]
+
+which the kernel computes tile-by-tile over a sequential grid:
+
+* the packet vector is padded to a multiple of the ``bp`` tile size
+  (padding rows carry the sentinel key, which is never admitted — the same
+  padded-tile pattern as :mod:`repro.kernels.time_flow_lookup`);
+* a running per-key byte accumulator (``acc``, the carry between tiles)
+  lives in a VMEM-resident output block revisited by every grid step
+  (constant index map — the standard sequential-accumulation layout, so the
+  grid must execute in order: ``dimension_semantics=("arbitrary",)`` on
+  TPU);
+* within a tile, the segmented exclusive prefix is a dense
+  ``[bp, bp]`` same-key-and-earlier masked row-sum — O(bp^2) work that maps
+  onto the VPU instead of a data-dependent sort;
+* the admission decision ``acc[key] + prefix + size <= cap[key]`` and the
+  per-key admitted-byte totals (``used``) fall out of the same tile pass.
+
+Key space is padded to a lane multiple (128) with zero capacity; the
+sentinel group (key == num_keys) parks padding and not-wanted packets.
+Outputs are bit-identical to the sort-based XLA path — enforced by
+``tests/test_admission.py`` and the fabric golden suite at
+``FabricConfig.admit_impl="pallas-interpret"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(cap_ref, key_ref, size_ref, adm_ref, used_ref, acc_ref, *,
+            num_keys: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        used_ref[...] = jnp.zeros_like(used_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = key_ref[...]                        # [bp] group key (sentinel parked)
+    s = size_ref[...]                       # [bp] bytes (0 when not wanted)
+    bp = k.shape[0]
+
+    # in-tile segmented exclusive prefix: same key, strictly earlier index
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bp, bp), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bp, bp), 1)
+    same_earlier = (k[None, :] == k[:, None]) & (cols < rows)
+    pre = jnp.sum(jnp.where(same_earlier, s[None, :], 0), axis=1)
+
+    acc = acc_ref[...]                      # wanted bytes per key, prior tiles
+    prefix = acc[k] + pre                   # vector gather (VMEM resident)
+    adm = (prefix + s <= cap_ref[...][k]) & (k < num_keys)
+    adm_ref[...] = adm.astype(jnp.int32)
+
+    acc_ref[...] = acc.at[k].add(s)
+    used_ref[...] = used_ref[...].at[k].add(jnp.where(adm, s, 0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_keys", "bp", "interpret"))
+def admission_admit(key, size, want, cap_left, *, num_keys: int,
+                    bp: int = 256, interpret: bool = True):
+    """FIFO group admission under per-key byte capacity.
+
+    key/size: [P] int32; want: [P] bool; cap_left: [num_keys] int32.
+    Returns ``(admitted [P] bool, used [num_keys] int32)`` — packet ``i`` is
+    admitted iff it is wanted and the wanted bytes of its key group at
+    indices ``< i`` plus its own size still fit ``cap_left[key[i]]``;
+    ``used`` is the admitted bytes per key. Bit-identical to
+    :func:`repro.core.fabric._group_admit`.
+
+    Arbitrary packet counts are supported (pad to a multiple of ``bp`` with
+    sentinel-key rows, slice back); the key space is padded to a lane
+    multiple with zero capacity.
+    """
+    P = key.shape[0]
+    key = jnp.where(want, key, num_keys).astype(jnp.int32)
+    size = jnp.where(want, size, 0).astype(jnp.int32)
+
+    bp = min(bp, max(P, 8))
+    Ppad = -(-P // bp) * bp
+    if Ppad != P:
+        padn = Ppad - P
+        key = jnp.pad(key, (0, padn), constant_values=num_keys)
+        size = jnp.pad(size, (0, padn))
+    NKpad = -(-(num_keys + 1) // 128) * 128
+    cap = jnp.zeros((NKpad,), jnp.int32).at[:num_keys].set(
+        cap_left.astype(jnp.int32))
+
+    adm, used, _acc = pl.pallas_call(
+        functools.partial(_kernel, num_keys=num_keys),
+        grid=(Ppad // bp,),
+        in_specs=[
+            pl.BlockSpec((NKpad,), lambda i: (0,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((NKpad,), lambda i: (0,)),   # used: accumulated
+            pl.BlockSpec((NKpad,), lambda i: (0,)),   # acc: tile carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Ppad,), jnp.int32),
+            jax.ShapeDtypeStruct((NKpad,), jnp.int32),
+            jax.ShapeDtypeStruct((NKpad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cap, key, size)
+    return adm[:P].astype(bool), used[:num_keys]

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .admission import admission_admit as _admit_pallas
 from .decode_attention import decode_attention as _decode_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .grouped_matmul import grouped_matmul as _grouped_pallas
@@ -18,7 +19,7 @@ from .rg_lru import rg_lru as _rg_lru_pallas
 from .time_flow_lookup import time_flow_lookup as _tfl_pallas
 
 __all__ = ["flash_attention", "decode_attention", "grouped_matmul", "rg_lru",
-           "time_flow_lookup"]
+           "time_flow_lookup", "admission_admit"]
 
 
 def flash_attention(q, k, v, *, n_q_heads, n_kv_heads, causal=True, window=0,
@@ -64,3 +65,11 @@ def time_flow_lookup(tbl_next, tbl_dep, node, dst, hashv, *, impl="pallas",
     if impl == "ref":
         return _ref.time_flow_lookup_ref(tbl_next, tbl_dep, node, dst, hashv)
     return _tfl_pallas(tbl_next, tbl_dep, node, dst, hashv, **kw)
+
+
+def admission_admit(key, size, want, cap_left, *, num_keys, impl="pallas",
+                    **kw):
+    if impl == "ref":
+        return _ref.admission_admit_ref(key, size, want, cap_left,
+                                        num_keys=num_keys)
+    return _admit_pallas(key, size, want, cap_left, num_keys=num_keys, **kw)

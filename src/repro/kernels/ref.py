@@ -86,3 +86,34 @@ def time_flow_lookup_ref(tbl_next, tbl_dep, node, dst, hashv):
     nxt = jnp.take_along_axis(rows_n, slot[:, None], axis=-1)[:, 0]
     dep = jnp.take_along_axis(rows_d, slot[:, None], axis=-1)[:, 0]
     return nxt, dep
+
+
+def admission_admit_ref(key, size, want, cap_left, *, num_keys):
+    """FIFO group admission under per-key byte capacity — the admission
+    kernel's oracle as a plain Python loop over packets in index order,
+    deliberately *independent* of both the XLA formulation
+    (``fabric._group_admit``: sort + segmented prefix-sum) and the Pallas
+    kernel (tiled accumulator), so a shared-formulation bug cannot hide.
+    A wanted packet is admitted while its group's running wanted-byte
+    count still fits ``cap_left[key]`` (rejected packets' bytes keep
+    counting — the cumulative-prefix-cut semantics the backlog filter
+    relies on). Eager/host only (not jittable); returns
+    (admitted [P] bool, used [num_keys] i32) as jnp arrays."""
+    import numpy as np
+    key = np.asarray(key)
+    size = np.asarray(size)
+    want = np.asarray(want)
+    cap = np.asarray(cap_left)
+    P = key.shape[0]
+    seen = np.zeros((num_keys,), np.int64)   # wanted bytes per group so far
+    used = np.zeros((num_keys,), np.int64)
+    admitted = np.zeros((P,), bool)
+    for i in range(P):
+        if not want[i]:
+            continue
+        k, s = int(key[i]), int(size[i])
+        if seen[k] + s <= int(cap[k]):
+            admitted[i] = True
+            used[k] += s
+        seen[k] += s
+    return jnp.asarray(admitted), jnp.asarray(used, jnp.int32)
