@@ -8,20 +8,22 @@ write ``BENCH_<module>.quick.json`` to keep the baseline comparable).
 mode ``--repeat`` times, takes the per-row *minimum* of ``us_per_call``
 (minimum, not median: wall-clock noise on shared runners is strictly
 additive, so the fastest repeat is the best estimate of the true cost),
-and compares it against the committed full-run baseline
-``BENCH_<module>.json`` with a per-row tolerance (``--tol``, default
-1.3x). Quick settings are never *larger* than the full run's, so a quick
-minimum exceeding ``tol x baseline`` is a genuine slowdown — the gate
-exits non-zero and lists the offending rows. Rows whose names only exist
-at full settings (e.g. ``route_ucmp_compile_108`` vs the quick ``_32``)
-are skipped; rows not yet in the baseline are reported as unbaselined but
-do not fail.
+and compares it against the committed baseline with a per-row tolerance
+(``--tol``, default 1.3x). A committed quick-mode baseline
+``BENCH_<module>.quick.json`` is preferred (quick-vs-quick compares the
+full row set like-for-like); the full-run ``BENCH_<module>.json`` is the
+fallback — quick settings are never *larger* than the full run's, so a
+quick minimum exceeding ``tol x baseline`` is a genuine slowdown either
+way. The gate exits non-zero and lists the offending rows. Rows whose
+names only exist at full settings (e.g. ``route_ucmp_compile_108`` vs the
+quick ``_32``) are skipped; rows not yet in the baseline are reported as
+unbaselined but do not fail.
 
 To intentionally re-baseline after a deliberate perf change::
 
     PYTHONPATH=src python -m benchmarks.run --json --only kernels_bench
-    PYTHONPATH=src python -m benchmarks.run --json --only fig_failover
-    git add BENCH_kernels_bench.json BENCH_fig_failover.json
+    PYTHONPATH=src python -m benchmarks.run --json --quick --only fig_failover
+    git add BENCH_kernels_bench.json BENCH_fig_failover.quick.json
 
 and commit the refreshed JSON together with the change that explains it
 (see also the benchmark table in README.md).
@@ -40,6 +42,7 @@ MODULES = [
     "fig8_fct",
     "fig9_transport",
     "fig_failover",
+    "fig_skew",
     "fig10_slice_duration",
     "fig12_eqo",
     "fig13_udp_rtt",
@@ -61,7 +64,12 @@ def _check(mods: list[str], tol: float, repeat: int) -> int:
     """Quick-run minima vs committed full baselines; 0 iff no regression."""
     failed = False
     for name in mods:
-        base_path = REPO_ROOT / f"BENCH_{name}.json"
+        # prefer a committed quick-mode baseline: quick-vs-quick is an
+        # apples-to-apples row set (no rows skipped for existing only at
+        # full settings) and a tighter gate than quick-vs-full minima
+        base_path = REPO_ROOT / f"BENCH_{name}.quick.json"
+        if not base_path.exists():
+            base_path = REPO_ROOT / f"BENCH_{name}.json"
         if not base_path.exists():
             print(f"# {name}: no committed baseline ({base_path.name}), "
                   "skipping", file=sys.stderr)

@@ -2,11 +2,13 @@
 
 Control plane (numpy/networkx, host-side — the paper's optical controller):
   topology (schedules), routing (time-flow table compilation), net (user API),
-  failures (fault traces, table repair, fast reroute).
+  failures (fault traces, table repair, fast reroute), controlplane (clock
+  skew, versioned table installs, controller stalls — the §7 guardband
+  constants exercised as a mechanism).
 Data plane (JAX, jit-able — the paper's P4 switch system):
   fabric (calendar queues, congestion detection, push-back, offloading,
-  failure masks), eqo (occupancy-estimation model), guardband (min-slice
-  derivation).
+  failure + control masks), eqo (occupancy-estimation model), guardband
+  (min-slice derivation).
 """
 from .topology import (Circuit, Schedule, connect, round_robin, edmonds, bvn,
                        jupiter, sorn, uniform_mesh, circuits_to_conn,
@@ -20,6 +22,9 @@ from .reconfigure import ReconfigConfig, ReconfigResult, reconfigure
 from .failures import (FailureEvent, FailureTrace, FailureMasks,
                        compile_masks, random_trace, repair, surviving_conn,
                        backup_tables, fast_reroute, simulate_phased)
+from .controlplane import (ControlEvent, ControlTrace, ControlMasks,
+                           compile_control, random_control_trace,
+                           install_schedule)
 from .traces import synthesize, flow_fcts, TRACES
 from .guardband import GuardbandInputs, derive as derive_guardband
 from .eqo import simulate_eqo
@@ -38,6 +43,8 @@ __all__ = [
     "FailureEvent", "FailureTrace", "FailureMasks", "compile_masks",
     "random_trace", "repair", "surviving_conn", "backup_tables",
     "fast_reroute", "simulate_phased",
+    "ControlEvent", "ControlTrace", "ControlMasks", "compile_control",
+    "random_control_trace", "install_schedule",
     "synthesize", "flow_fcts", "TRACES",
     "GuardbandInputs", "derive_guardband",
     "simulate_eqo", "toolkit",

@@ -54,11 +54,22 @@ kept in ``tests/fabric_ref.py``):
   effectively *sorted once per slice*. Under push-back the capacity
   argument is weakened (an rx candidate that later flips to rx-rejected
   removes its bytes from successors' capacity prefixes), but two rx-aware
-  cuts survive and are applied instead: receivers' rx rejections are
+  cuts survive and are applied instead. Receivers' rx rejections are
   themselves a monotone FIFO prefix cut (room shrinks at least as fast as
-  any candidate's rx prefix), and electrical groups are rx-exempt
-  wholesale, so their capacity cut stands (ISSUE 5; bit-identity vs the
-  unfiltered reference enforced by the fabric goldens).
+  any candidate's rx prefix), so rx-subject candidates at-or-after their
+  receiver's first rx rejection are dropped. And for the capacity cut,
+  the only bytes that can ever *leave* a candidate's prefix are those of
+  an earlier same-group member that was rx-admitted but capacity-rejected
+  (it may flip to rx-rejected later); so an rx-exempt candidate
+  (electrical egress, or delivering directly to its destination) in a
+  group with no such "rescuable" predecessor is provably rejected for the
+  rest of the slice, and later hops cut strictly *after* the group's
+  first marked index — the marked packet itself stays in the admission
+  sort as the byte anchor that keeps every successor's prefix above
+  capacity. rx-subject members are never capacity-cut (their bytes
+  participate in other candidates' rx prefixes). (ISSUE 5/6;
+  bit-identity vs the unfiltered reference enforced by the fabric
+  goldens, including a mixed rx/capacity-pressure case.)
 * **Admission itself is a swappable backend** (``FabricConfig.admit_impl``):
   the XLA stable-sort + segmented-prefix formulation, or the sort-free
   Pallas kernel (:mod:`repro.kernels.admission`) that carries a per-key
@@ -133,7 +144,14 @@ class FabricConfig:
     (:class:`repro.core.failures.FailureMasks`) enter through
     :func:`simulate`'s ``failures`` argument and are threaded through the
     jitted step; the step only branches on their presence, so failure-free
-    runs trace the exact pre-failure program.
+    runs trace the exact pre-failure program. Control-plane state
+    (:class:`repro.core.controlplane.ControlMasks` — per-ToR clock-skew
+    phase offsets and guard-band misses) enters the same way through the
+    ``control`` argument, and versioned time-flow tables (mixed-version
+    epochs during a staggered install) through
+    :func:`repro.core.reconfigure.reconfigure`'s install machinery; both
+    follow the same presence-gated rule, so zero-skew runs trace the
+    exact pre-control program.
     """
 
     slice_bytes: int = 75_000        # 100 Gbps x 6 us, per circuit per slice
@@ -373,7 +391,7 @@ def _build_caps_all(conn, cfg: FabricConfig, N: int):
 
 
 def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
-             num_slices: int, failures=None) -> SimResult:
+             num_slices: int, failures=None, control=None) -> SimResult:
     """Run the fabric for ``num_slices`` slices.
 
     Args:
@@ -392,6 +410,18 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
             re-enqueue through the §5.2 machinery; down ToRs neither
             inject nor terminate electrical transfers. ``None`` (default)
             traces exactly the failure-free program.
+        control: optional :class:`repro.core.controlplane.ControlMasks`
+            covering the run. A ToR skewed by whole slices
+            (``phase_off``) consults its time-flow tables at its *local*
+            slice, so it injects into the wrong slice's circuit (live
+            only if the schedule happens to provide it — otherwise the
+            packet misses and re-enqueues via the §5.2 deferral path); a
+            ToR whose residual offset exceeds the guard band
+            (``skew_miss``) misses its optical transmit windows
+            outright that slice (the asynchronous electrical fabric is
+            exempt). Requires ``cfg.lookup_impl == "jnp"`` (per-ToR
+            local slices make the table lookup per-packet in time).
+            ``None`` (default) traces exactly the zero-skew program.
 
     Everything inside is jitted; re-compilation happens per (packet count,
     table shapes, config). For a loop that *recompiles the tables on-device
@@ -419,6 +449,15 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
         failures.validate(num_slices, N)
         j["link_cap"] = dev(failures.link_cap, jnp.float32)
         j["node_ok"] = dev(failures.node_ok, jnp.bool_)
+    if control is not None:
+        if cfg.lookup_impl != "jnp":
+            raise ValueError(
+                "control-plane masks need lookup_impl='jnp': per-ToR local "
+                f"slices make lookups per-packet in time (got "
+                f"{cfg.lookup_impl!r})")
+        control.validate(num_slices, N)
+        j["phase_off"] = dev(control.phase_off)
+        j["skew_miss"] = dev(control.skew_miss, jnp.bool_)
     per_packet_mp = tables.multipath == "packet"
     out = _simulate_jit(j, cfg, num_slices, per_packet_mp,
                         int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1)
@@ -461,7 +500,18 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     NKEY = N * (N + 1)
     T2 = 2 * T                       # calendar-queue ring: dep in (t, t + 2T)
     limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
-    Tr = j["tf_next"].shape[0]
+
+    # Control-plane masks (repro.core.controlplane): when present, each
+    # ToR consults its tables at its *local* slice (t + phase_off) and a
+    # ToR whose residual skew exceeds the guard band cannot transmit
+    # optically that slice. Versioned tables ("tf_next_v" etc., stacked
+    # [V, Tr, N, D, K]) come from reconfigure's staggered-install
+    # machinery: each ToR looks up the version its install state selects
+    # (j["vsel"]). As with failures, absent inputs fold every branch away
+    # and the traced program is exactly the zero-skew, single-version one.
+    has_ctrl = "phase_off" in j
+    has_vers = "tf_next_v" in j
+    Tr = j["tf_next_v"].shape[1] if has_vers else j["tf_next"].shape[0]
     # population tiers for the per-phase compact views (see module docstring)
     TIERS = [c for c in (2048, ADMIT_C) if c < P]
 
@@ -507,12 +557,21 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
     # Stacked (injection, transit) tables for the fused first-phase lookup.
     # K is padded to the common max with invalid slots: the valid-slot count
-    # (and therefore the hash slot choice) is unchanged.
-    K = max(j["inj_next"].shape[-1], j["tf_next"].shape[-1])
-    padk = lambda a, fill: jnp.pad(a, [(0, 0)] * 3 + [(0, K - a.shape[-1])],
-                                   constant_values=fill)
-    stk_n = jnp.stack([padk(j["inj_next"], -1), padk(j["tf_next"], -1)])
-    stk_d = jnp.stack([padk(j["inj_dep"], 0), padk(j["tf_dep"], 0)])
+    # (and therefore the hash slot choice) is unchanged. With versioned
+    # tables the stack gains a version axis: [2, V, Tr, N, D, K].
+    if has_vers:
+        K = max(j["inj_next_v"].shape[-1], j["tf_next_v"].shape[-1])
+        padk = lambda a, fill: jnp.pad(
+            a, [(0, 0)] * 4 + [(0, K - a.shape[-1])], constant_values=fill)
+        stk_n = jnp.stack([padk(j["inj_next_v"], -1),
+                           padk(j["tf_next_v"], -1)])
+        stk_d = jnp.stack([padk(j["inj_dep_v"], 0), padk(j["tf_dep_v"], 0)])
+    else:
+        K = max(j["inj_next"].shape[-1], j["tf_next"].shape[-1])
+        padk = lambda a, fill: jnp.pad(
+            a, [(0, 0)] * 3 + [(0, K - a.shape[-1])], constant_values=fill)
+        stk_n = jnp.stack([padk(j["inj_next"], -1), padk(j["tf_next"], -1)])
+        stk_d = jnp.stack([padk(j["inj_dep"], 0), padk(j["tf_dep"], 0)])
 
     # per-packet constants bundled into the phase views
     CONSTS = dict(size=j["size"], dst=j["dst"], src=j["src"], flow=j["flow"],
@@ -609,8 +668,17 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 # table at src, deferred packets read the transit table at loc
                 sel = jnp.where(v["ready"], 0, 1)
                 node = jnp.where(v["ready"], v["src"], jnp.clip(v["loc"], 0, N - 1))
-                row_n = stk_n[sel, t % Tr, node, v["dst"]]
-                row_d = stk_d[sel, t % Tr, node, v["dst"]]
+                # a skewed ToR looks its tables up at its *local* slice
+                tl = t + j["phase_off"][t, node] if has_ctrl else t
+                if has_vers:
+                    # each ToR reads the table version its install state
+                    # selects (old / new / safe) — mixed-version epochs
+                    vn = j["vsel"][t - j["vsel_t0"], node]
+                    row_n = stk_n[sel, vn, tl % Tr, node, v["dst"]]
+                    row_d = stk_d[sel, vn, tl % Tr, node, v["dst"]]
+                else:
+                    row_n = stk_n[sel, tl % Tr, node, v["dst"]]
+                    row_d = stk_d[sel, tl % Tr, node, v["dst"]]
                 nxt_i, off_i = _select_slot(row_n, row_d, v["h"])
                 nxt_r, off_r = nxt_i, off_i
             else:
@@ -620,7 +688,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                                        jnp.clip(v["loc"], 0, N - 1), v["dst"],
                                        v["h"], cfg.lookup_impl)
             if cfg.flow_pausing:
-                fd = j["first_direct"][t % T, v["src"], v["dst"]]
+                # elephants wait for the direct circuit their *source ToR*
+                # believes is coming (its local clock)
+                tsrc = t + j["phase_off"][t, v["src"]] if has_ctrl else t
+                fd = j["first_direct"][tsrc % T, v["src"], v["dst"]]
                 use_direct = v["is_eleph"] & (fd >= 0)
                 nxt_i = jnp.where(use_direct, v["dst"], nxt_i)
                 off_i = jnp.where(use_direct, fd, off_i)
@@ -683,12 +754,20 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
         used = jnp.zeros((NKEY,), jnp.int32)
         buf_now = on_switch_bytes(s["occ"])
 
-        def hop_logic(s, v, used, buf_now, backlog_min, rx_backlog_min):
+        def hop_logic(s, v, used, buf_now, backlog_min, rx_backlog_min,
+                      resc_min):
             want = v["active"]
             if has_fail:
                 # the electrical fabric cannot terminate at a down ToR;
                 # dead optical circuits are already capacity-zero
                 want &= ~((v["nxt"] == N) & ~j["node_ok"][t, v["dst"]])
+            if has_ctrl:
+                # a ToR whose residual skew exceeds the guard band misses
+                # its optical transmit windows this slice (§7); the
+                # asynchronous electrical fabric is exempt. The packet
+                # misses its slice and re-enqueues via the §5.2 machinery.
+                want &= ~(j["skew_miss"][t, jnp.clip(v["loc"], 0, N - 1)] &
+                          (v["nxt"] < N))
             if cfg.pushback:
                 # push-back rejects at the *sender*: no transmission into a
                 # full downstream switch (paper §5.2); rejected packets miss
@@ -721,25 +800,34 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             # admitted later this slice. Remember the minimum rejected index
             # per group; later hops drop those provably-rejected candidates.
             if not cfg.pushback:
-                rejected = v["active"] & ~admitted
+                # only *wanted* rejections poison the suffix: packets cut
+                # from want by failure/skew masks never consumed capacity
+                # and must not filter their healthy group-mates
+                rejected = want & ~admitted
                 backlog_min = backlog_min.at[jnp.where(rejected, key, 0)].min(
                     jnp.where(rejected, v["gidx"], P))
-            elif cfg.elec_bytes > 0:
-                # Under push-back the capacity argument survives only for
-                # groups the rx cut can never touch: a packet whose earlier
-                # same-group bytes include an rx-*subject* candidate can be
-                # "rescued" when that candidate later flips to rx-rejected
-                # and its bytes leave the capacity prefix. Electrical groups
-                # (loc, N) are rx-exempt wholesale (need_buf requires
-                # nxt < N), their members contribute to no rx prefix, and
-                # their first *wanted* rejected index poisons the suffix
-                # exactly as in the unfiltered program — so the capacity
-                # filter stays sound for them (and only them). Without an
-                # electrical fabric there are no such groups to cut, so the
-                # bookkeeping is skipped statically.
-                rej_elec = want & ~admitted & (v["nxt"] == N)
-                backlog_min = backlog_min.at[jnp.where(rej_elec, key, 0)].min(
-                    jnp.where(rej_elec, v["gidx"], P))
+            else:
+                # Under push-back the only bytes that can ever *leave* a
+                # candidate's capacity prefix belong to an earlier
+                # same-group member that was rx-admitted but
+                # capacity-rejected this slice: it stays a candidate and
+                # may flip to rx-rejected at a later hop (capacity-admitted
+                # members transmitted — their bytes became consumed
+                # capacity and never come back; rx-rejected members were
+                # never in the prefix). Track the first such "rescuable"
+                # index per group; an rx-exempt candidate (electrical, or
+                # delivering directly to its destination) rejected with no
+                # rescuable predecessor is then provably rejected for the
+                # rest of the slice. rx-subject rejections are never
+                # marked: their bytes participate in other candidates' rx
+                # prefixes, and cutting them would perturb the rx cut.
+                resc = need_buf & adm_rx & ~admitted
+                resc_min = resc_min.at[jnp.where(resc, key, 0)].min(
+                    jnp.where(resc, v["gidx"], P))
+                markable = want & ~admitted & ~need_buf & \
+                    (v["gidx"] < resc_min[key])
+                backlog_min = backlog_min.at[jnp.where(markable, key, 0)].min(
+                    jnp.where(markable, v["gidx"], P))
             is_elec = admitted & (v["nxt"] == N)
             moved = admitted & ~is_elec
             newloc = jnp.where(moved, v["nxt"], v["loc"])
@@ -779,11 +867,19 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
             v["loc"] = jnp.where(at_dst, DELIVERED, newloc)
             v["nhops"] = v["nhops"] + admitted.astype(jnp.int32)
-            # transit lookup at the new node
+            # transit lookup at the new node (its local slice, its version)
             in_transit = moved & ~at_dst
-            nxt_t, off_t = _lookup(j["tf_next"], j["tf_dep"], t,
-                                   jnp.clip(v["loc"], 0, N - 1), v["dst"],
-                                   v["h"], cfg.lookup_impl)
+            node_t = jnp.clip(v["loc"], 0, N - 1)
+            tl = t + j["phase_off"][t, node_t] if has_ctrl else t
+            if has_vers:
+                vn = j["vsel"][t - j["vsel_t0"], node_t]
+                rn = j["tf_next_v"][vn, tl % Tr, node_t, v["dst"]]
+                rd = j["tf_dep_v"][vn, tl % Tr, node_t, v["dst"]]
+                nxt_t, off_t = _select_slot(rn, rd, v["h"])
+            else:
+                nxt_t, off_t = _lookup(j["tf_next"], j["tf_dep"], tl,
+                                       node_t, v["dst"], v["h"],
+                                       cfg.lookup_impl)
             v["nxt"] = jnp.where(in_transit, nxt_t, v["nxt"])
             v["dep"] = jnp.where(in_transit, t + off_t, v["dep"])
             # buffer-overflow drops on arrival at a new switch; a rejection
@@ -801,10 +897,11 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_t),
                                            v["size"], arrived & (off_t > 0))
             s, v = enqueue_checks(s, v, arrived, jnp.where(in_transit, off_t, 0))
-            return s, v, used, buf_now, backlog_min, rx_backlog_min
+            return s, v, used, buf_now, backlog_min, rx_backlog_min, resc_min
 
         backlog_min = jnp.full((NKEY,), P, jnp.int32)
         rx_backlog_min = jnp.full((N,), P, jnp.int32)
+        resc_min = jnp.full((NKEY,), P, jnp.int32)
         for _hop in range(cfg.hops_per_slice):
             want0 = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
                     (s["nhops"] < cfg.max_hops)
@@ -815,48 +912,54 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             else:
                 # push-back-aware backlog filter: drop candidates at-or-after
                 # a receiver's first rx-rejected index (rx rejection is
-                # monotone — see hop_logic), and electrical candidates
-                # at-or-after their rx-exempt group's first capacity
-                # rejection. Optical capacity rejections stay unfiltered:
-                # their prefixes can lose bytes to later rx flips.
+                # monotone — see hop_logic), and rx-exempt candidates
+                # strictly *after* their group's first marked capacity
+                # rejection (the marked packet itself stays in the sort as
+                # the byte anchor of every successor's over-capacity
+                # prefix). rx-subject capacity rejections stay unfiltered:
+                # their prefixes can lose bytes to later rx flips, and
+                # their bytes feed other candidates' rx prefixes.
                 rx_subject = (s["nxt"] >= 0) & (s["nxt"] < N) & \
                     (s["nxt"] != j["dst"])
                 want0 &= ~(rx_subject &
                            (pid >= rx_backlog_min[jnp.clip(s["nxt"], 0, N - 1)]))
-                if cfg.elec_bytes > 0:
-                    want0 &= ~((s["nxt"] == N) & (pid >= backlog_min[key_all]))
+                want0 &= ~(~rx_subject & (pid > backlog_min[key_all]))
             cnt0 = jnp.sum(want0)
 
             def hop_full(carry, want0=want0):
-                s, used, buf_now, backlog_min, rx_backlog_min = carry
+                s, used, buf_now, backlog_min, rx_backlog_min, resc_min = carry
                 v, idx = make_view(s, HOP_FIELDS, None,
                                    dict(active=want0), None)
                 v["gidx"] = pid
-                s, v, used, buf_now, backlog_min, rx_backlog_min = hop_logic(
-                    dict(s), v, used, buf_now, backlog_min, rx_backlog_min)
+                (s, v, used, buf_now, backlog_min, rx_backlog_min,
+                 resc_min) = hop_logic(dict(s), v, used, buf_now, backlog_min,
+                                       rx_backlog_min, resc_min)
                 return (write_view(s, v, HOP_FIELDS, idx), used, buf_now,
-                        backlog_min, rx_backlog_min)
+                        backlog_min, rx_backlog_min, resc_min)
 
             def hop_compact(C, want0=want0):
                 def fn(carry, C=C, want0=want0):
-                    s, used, buf_now, backlog_min, rx_backlog_min = carry
+                    (s, used, buf_now, backlog_min, rx_backlog_min,
+                     resc_min) = carry
                     v, idx = make_view(s, HOP_FIELDS, want0, {}, C)
                     v["active"] = v.pop("_ok")
                     v["gidx"] = jnp.minimum(idx, P).astype(jnp.int32)
-                    s, v, used, buf_now, backlog_min, rx_backlog_min = \
-                        hop_logic(dict(s), v, used, buf_now, backlog_min,
-                                  rx_backlog_min)
+                    (s, v, used, buf_now, backlog_min, rx_backlog_min,
+                     resc_min) = hop_logic(dict(s), v, used, buf_now,
+                                           backlog_min, rx_backlog_min,
+                                           resc_min)
                     return (write_view(s, v, HOP_FIELDS, idx), used, buf_now,
-                            backlog_min, rx_backlog_min)
+                            backlog_min, rx_backlog_min, resc_min)
                 return fn
 
             hop_fn = hop_full
             for c in TIERS[::-1]:
                 hop_fn = (lambda carry, cc=c, inner=hop_fn:
                           jax.lax.cond(cnt0 <= cc, hop_compact(cc), inner, carry))
-            s, used, buf_now, backlog_min, rx_backlog_min = jax.lax.cond(
-                cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
-                (s, used, buf_now, backlog_min, rx_backlog_min))
+            s, used, buf_now, backlog_min, rx_backlog_min, resc_min = \
+                jax.lax.cond(
+                    cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
+                    (s, used, buf_now, backlog_min, rx_backlog_min, resc_min))
 
         # -- 4. handle packets that missed their slice ----------------------
         missed = (s["loc"] >= 0) & (s["dep"] == t)

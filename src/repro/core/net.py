@@ -24,6 +24,7 @@ import dataclasses
 import numpy as np
 
 from . import routing as routing_mod
+from .controlplane import ControlTrace, compile_control
 from .fabric import FabricConfig, FabricTables, SimResult, Workload, simulate
 from .failures import FailureTrace, compile_masks
 from .routing import CompiledRouting
@@ -57,6 +58,7 @@ class OpenOpticsNet:
         self._last_workload: Workload | None = None
         self._clock = 0  # slices elapsed across run() windows
         self.failure_trace = FailureTrace()
+        self.control_trace = ControlTrace()
 
     # -- Topology APIs ------------------------------------------------------
     def deploy_topo(self, sched: Schedule) -> bool:
@@ -118,6 +120,46 @@ class OpenOpticsNet:
         self.failure_trace.heal_all(self._clock if t is None else t)
         return True
 
+    # -- Control-plane fault APIs (repro.core.controlplane) ------------------
+    def inject_control(self, kind: str, *, node: int = -1,
+                       skew_ns: float = 0.0, drift_ns: float = 0.0,
+                       delay: int = 0, loss: float = 0.0,
+                       t_start: int | None = None,
+                       t_end: int | None = None) -> bool:
+        """Inject a control-plane fault (Table-1 API style). ``kind`` is
+        one of ``"skew"`` (ToR ``node``'s clock runs ``skew_ns`` off
+        fabric time), ``"drift"`` (``drift_ns`` more per slice),
+        ``"install_delay"`` / ``"install_loss"`` (table-install messages
+        to ``node``, or every ToR when -1, are delayed/lost), or
+        ``"stall"`` (the controller stalls). ``t_start`` defaults to the
+        net's current clock, ``t_end`` to open-ended (until
+        :meth:`heal_control`). Subsequent :meth:`run` windows simulate
+        under the accumulated trace.
+        """
+        from .controlplane import OPEN_END
+        t0 = self._clock if t_start is None else t_start
+        t1 = OPEN_END if t_end is None else t_end
+        if kind == "skew":
+            self.control_trace.skew(node, skew_ns, t0, t1)
+        elif kind == "drift":
+            self.control_trace.drift(node, drift_ns, t0, t1)
+        elif kind == "install_delay":
+            self.control_trace.install_delay(delay, t0, t1, node=node)
+        elif kind == "install_loss":
+            self.control_trace.install_loss(loss, t0, t1, node=node)
+        elif kind == "stall":
+            self.control_trace.stall(t0, t1)
+        else:
+            raise ValueError(f"unknown control fault kind {kind!r}")
+        return True
+
+    def heal_control(self, t: int | None = None) -> bool:
+        """End every active control-plane fault at slice ``t`` (default:
+        the net's current clock; the :mod:`~repro.core.controlplane`
+        mirror of :meth:`heal`)."""
+        self.control_trace.heal_all(self._clock if t is None else t)
+        return True
+
     # -- Monitoring APIs ------------------------------------------------------
     def collect(self, interval: str | None = None) -> np.ndarray:
         """Global traffic matrix observed in the last run window (bytes)."""
@@ -148,7 +190,14 @@ class OpenOpticsNet:
                                         self._clock + num_slices):
             masks = compile_masks(self.failure_trace, self.schedule,
                                   num_slices, t0=self._clock)
-        res = simulate(tables, wl, self.fabric_cfg, num_slices, failures=masks)
+        ctrl = None
+        if self.control_trace.active_in(self._clock,
+                                        self._clock + num_slices):
+            ctrl = compile_control(
+                self.control_trace, num_slices, self.n_nodes,
+                slice_ns=self.slice_us * 1000.0, t0=self._clock)
+        res = simulate(tables, wl, self.fabric_cfg, num_slices,
+                       failures=masks, control=ctrl)
         self._last_result = res
         self._last_workload = wl
         tm = np.zeros((self.n_nodes, self.n_nodes), dtype=np.float64)

@@ -33,6 +33,25 @@ jitted ``lax.scan``. Each epoch body, entirely on-device:
    whose table inputs come from this epoch's recompile rather than a host
    deploy.
 
+With control-plane masks (``control=``, from
+:mod:`repro.core.controlplane`) step 4 stops being a free atomic swap and
+becomes a *versioned install* against the table-install delay/loss trace:
+the controller sends the new tables at the epoch's first slice, each ToR
+acks when (if) its message lands, and the fabric runs with per-ToR
+version-selected tables — a ToR whose install was lost keeps looking up
+its *old* tables while its peers have moved on (mixed-version epochs are
+first-class simulated state, validated by
+:func:`repro.core.toolkit.check_tables_mixed`). ``ReconfigConfig.install``
+picks the protocol: ``"hotswap"`` flips each ToR unilaterally at message
+arrival (stale ToRs stay stale); ``"2pc"`` is a two-phase install —
+prepare is re-sent with bounded retry/backoff until every ToR acked, and
+the whole fabric activates at the first slice boundary after all acks (or
+nobody activates, on timeout). ``ReconfigConfig.degrade`` adds graceful
+degradation: when a 2PC install times out or detected skew exceeds the
+guard band, the epoch falls back to the always-consistent schedule-
+oblivious direct tables over the base cycle (safe mode, version 2) and
+re-promotes in the next epoch once acks recover.
+
 Because every scheduler emits a statically-shaped schedule (hot slices have
 a static count; the matching holds one topology; the BvN cycle has a static
 slice count), every epoch's schedule, tables, and state share one shape and
@@ -92,6 +111,25 @@ class ReconfigConfig:
         measure -> match -> recompile -> hot-swap loop self-heals
         on-device. Without masks (or with ``heal=False``) the loop is
         oblivious to failures.
+    install: table-install protocol when control-plane masks are passed
+        (``control=``; without them installs are the free atomic swap and
+        these knobs are inert). ``"hotswap"``: each ToR flips to the new
+        tables when (if) its install message lands — lost messages leave
+        it stale. ``"2pc"``: two-phase install — prepare is re-sent up to
+        ``install_retries`` times every ``install_backoff`` slices, and
+        the fabric activates atomically at the first slice boundary after
+        *all* ToRs acked, or not at all if that exceeds
+        ``install_timeout`` slices.
+    install_retries / install_backoff / install_timeout: the 2PC retry
+        bound, slices between attempts, and the epoch-relative ack
+        deadline (must be <= epoch_slices when control masks are passed —
+        the controller abandons the install at the epoch boundary).
+    degrade: graceful degradation to safe mode (needs ``install="2pc"``
+        and ``scheduler="hot_slices"``): when the install times out or
+        any ToR's skew exceeds the guard band during the epoch, every ToR
+        falls back to the always-consistent schedule-oblivious direct
+        tables over the base cycle for the rest of the epoch, and the
+        next epoch re-promotes if its own install succeeds skew-free.
     """
 
     epoch_slices: int = 32
@@ -105,6 +143,11 @@ class ReconfigConfig:
     max_hop: int = 4
     kpaths: int = 4
     heal: bool = False
+    install: str = "hotswap"
+    install_retries: int = 2
+    install_backoff: int = 2
+    install_timeout: int = 8
+    degrade: bool = False
 
 
 @dataclasses.dataclass
@@ -129,10 +172,19 @@ class ReconfigResult:
     epoch_conn: np.ndarray       # [num_epochs, T_e, N, U] schedule per epoch
     failed_links: np.ndarray     # [num_epochs] dead circuits seen at epoch
                                  # start (0 when run without failure masks)
+    install_ver: np.ndarray      # [num_epochs, N] table version each ToR runs
+                                 # at epoch end (epoch index; -1 = boot
+                                 # tables). Mixed rows = staggered installs.
+    install_lat: np.ndarray      # [num_epochs] slices from prepare to the
+                                 # last ack (-1: install never completed)
+    install_retries: np.ndarray  # [num_epochs] 2PC re-sends used
+    degraded: np.ndarray         # [num_epochs] bool: epoch fell back to the
+                                 # schedule-oblivious safe tables
 
 
 def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
-                rcfg: ReconfigConfig, failures=None) -> ReconfigResult:
+                rcfg: ReconfigConfig, failures=None,
+                control=None) -> ReconfigResult:
     """Run the traffic-aware reconfiguration loop (see module docstring).
 
     ``sched`` is the *base* cycle ([T0, N, U]). With
@@ -152,6 +204,17 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     fabric steps; with ``rcfg.heal`` each epoch additionally *detects* the
     failure set at its first slice and recompiles the tables over the
     surviving circuits — the self-healing detect -> repair loop.
+
+    ``control`` (a :class:`repro.core.controlplane.ControlMasks` covering
+    the same span) threads clock skew through the fabric steps *and* turns
+    each epoch's table deploy into a versioned install against the
+    install-delay/loss trace (see the module docstring and
+    ``ReconfigConfig.install`` / ``degrade``): the fabric carries per-ToR
+    current tables across epochs and every lookup reads the version its
+    ToR's install state selects, so stale-table and mixed-version epochs
+    are simulated, not assumed away. With an all-zero trace every install
+    lands at the epoch's first slice and the results are bit-identical to
+    the atomic-swap program (pinned by ``tests/test_controlplane.py``).
     """
     if rcfg.scheme not in routing_jnp.SCHEMES:
         raise ValueError(f"unknown TO scheme {rcfg.scheme!r}: expected one "
@@ -165,6 +228,21 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
         raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
                          "'xla', 'pallas', or 'pallas-interpret'")
+    if rcfg.install not in ("hotswap", "2pc"):
+        raise ValueError(f"unknown install protocol {rcfg.install!r}: "
+                         "expected 'hotswap' or '2pc'")
+    if rcfg.install_retries < 0 or rcfg.install_backoff < 1 \
+            or rcfg.install_timeout < 1:
+        raise ValueError(
+            "install_retries must be >= 0, install_backoff >= 1 and "
+            f"install_timeout >= 1 (got {rcfg.install_retries}, "
+            f"{rcfg.install_backoff}, {rcfg.install_timeout})")
+    if rcfg.degrade and (rcfg.install != "2pc"
+                         or rcfg.scheduler != "hot_slices"):
+        raise ValueError(
+            "degrade needs install='2pc' (a timeout to detect) and "
+            "scheduler='hot_slices' (safe tables are the direct tables "
+            "over the base cycle; edmonds/bvn have no base cycle)")
     T0, N, U = sched.conn.shape
     # epoch-0 placeholder schedule (dark where demand-derived): fixes the
     # static epoch-cycle shape for the scan
@@ -187,6 +265,17 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
         failures.validate(rcfg.num_epochs * rcfg.epoch_slices, N)
         j["link_cap"] = dev(failures.link_cap, jnp.float32)
         j["node_ok"] = dev(failures.node_ok, jnp.bool_)
+    if control is not None:
+        control.validate(rcfg.num_epochs * rcfg.epoch_slices, N)
+        if rcfg.install_timeout > rcfg.epoch_slices:
+            raise ValueError(
+                f"install_timeout ({rcfg.install_timeout}) exceeds "
+                f"epoch_slices ({rcfg.epoch_slices}): the controller "
+                "abandons an install at the epoch boundary")
+        j["phase_off"] = dev(control.phase_off)
+        j["skew_miss"] = dev(control.skew_miss, jnp.bool_)
+        j["ctrl_delay"] = dev(control.ctrl_delay)
+        j["ctrl_ok"] = dev(control.ctrl_ok, jnp.bool_)
     num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
     out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
     return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
@@ -202,7 +291,31 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
     pair_key = j["src"] * N + j["dst"]
     offdiag = (jnp.arange(N * N) // N) != (jnp.arange(N * N) % N)
 
-    def epoch(state, e):
+    has_ctrl = "phase_off" in j
+    INT_INF = jnp.int32(1 << 30)
+    S_total = rcfg.num_epochs * E
+    if has_ctrl:
+        # boot tables: until its first install lands, every ToR runs tables
+        # compiled over the epoch-0 placeholder cycle (version -1)
+        boot = routing_jnp.compile_tables(
+            j["conn"], rcfg.scheme, max_hop=rcfg.max_hop, kpaths=rcfg.kpaths)
+        if rcfg.degrade:
+            # safe mode: schedule-oblivious direct tables over the base
+            # cycle (K = 1, padded to the scheme's slot counts)
+            sn, sd = routing_jnp.direct_tables(j["conn"])
+            padk = lambda a, KK, fill: jnp.pad(
+                a, [(0, 0)] * 3 + [(0, KK - a.shape[-1])],
+                constant_values=fill)
+            safe = (padk(sn, boot[0].shape[-1], -1),
+                    padk(sd, boot[1].shape[-1], 0),
+                    padk(sn, boot[2].shape[-1], -1),
+                    padk(sd, boot[3].shape[-1], 0))
+
+    def epoch(carry, e):
+        if has_ctrl:
+            state, cur, ver = carry
+        else:
+            state = carry
         t0 = e * E
 
         # 1. measure: pending bytes per (src, dst) from the live state
@@ -259,21 +372,117 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         tf_n, tf_d, inj_n, inj_d = routing_jnp.compile_tables(
             conn_e, rcfg.scheme, max_hop=rcfg.max_hop, kpaths=rcfg.kpaths)
 
-        # 4. hot-swap into the fabric and run the epoch
-        jj = dict(j, conn=conn_e, tf_next=tf_n, tf_dep=tf_d,
-                  inj_next=inj_n, inj_dep=inj_d,
-                  first_direct=routing_jnp.first_direct_offsets(conn_e))
-        step = _make_step(jj, cfg, True, num_flows)
-        state, ys = jax.lax.scan(step, state,
-                                 t0 + jnp.arange(E, dtype=jnp.int32))
+        # 4. deploy into the fabric and run the epoch
+        tis = t0 + jnp.arange(E, dtype=jnp.int32)
+        if not has_ctrl:
+            # atomic hot-swap: this epoch's tables are live from its first
+            # slice (the pre-control program, traced verbatim)
+            jj = dict(j, conn=conn_e, tf_next=tf_n, tf_dep=tf_d,
+                      inj_next=inj_n, inj_dep=inj_d,
+                      first_direct=routing_jnp.first_direct_offsets(conn_e))
+            step = _make_step(jj, cfg, True, num_flows)
+            state, ys = jax.lax.scan(step, state, tis)
+            install_ver = jnp.full((N,), e, jnp.int32)
+            install_lat = jnp.zeros((), jnp.int32)
+            retries_used = jnp.zeros((), jnp.int32)
+            degraded = jnp.zeros((), bool)
+            out_carry = state
+        else:
+            # 4a. versioned install against the install-delay/loss trace:
+            # attempt k is sent at t0 + k*backoff and reaches ToR n at
+            # send + ctrl_delay[send, n] iff ctrl_ok[send, n]
+            n_att = rcfg.install_retries + 1 if rcfg.install == "2pc" else 1
+            sends = t0 + jnp.arange(n_att, dtype=jnp.int32) \
+                * rcfg.install_backoff
+            sidx = jnp.minimum(sends, S_total - 1)
+            a_k = jnp.where(j["ctrl_ok"][sidx],
+                            sends[:, None] + j["ctrl_delay"][sidx],
+                            INT_INF)                       # [A, N]
+            arr = jnp.min(a_k, axis=0)                     # [N] first ack
+            act = jnp.max(arr)                             # last ack
+            if rcfg.install == "2pc":
+                # activate atomically once every ToR acked within the
+                # deadline; retries_used = first attempt whose cumulative
+                # acks cover the fabric
+                ack_k = jnp.max(jax.lax.cummin(a_k, axis=0), axis=1)  # [A]
+                ok_k = ack_k <= t0 + rcfg.install_timeout
+                success = ok_k[-1]
+                retries_used = jnp.where(
+                    jnp.any(ok_k), jnp.argmax(ok_k),
+                    rcfg.install_retries).astype(jnp.int32)
+                switch_t = jnp.broadcast_to(
+                    jnp.where(success, act, INT_INF), (N,))
+            else:
+                # hotswap: each ToR flips unilaterally when its message
+                # lands — lost messages leave it on its old tables
+                success = act < INT_INF
+                retries_used = jnp.zeros((), jnp.int32)
+                switch_t = arr
+            install_lat = jnp.where(success, act - t0, -1).astype(jnp.int32)
+
+            # 4b. per-(slice, ToR) version select: 0 = current (old),
+            # 1 = this epoch's install, 2 = safe mode
+            vsel = (tis[:, None] >= switch_t[None, :]).astype(jnp.int32)
+            degraded = jnp.zeros((), bool)
+            if rcfg.degrade:
+                skew_any = jnp.any(jax.lax.dynamic_slice_in_dim(
+                    j["skew_miss"], t0, E, 0))
+                t_degr = jnp.where(skew_any, t0, INT_INF)
+                t_degr = jnp.minimum(t_degr, jnp.where(
+                    success, INT_INF, t0 + rcfg.install_timeout))
+                vsel = jnp.where(tis[:, None] >= t_degr, 2, vsel)
+                degraded = t_degr < INT_INF
+
+            tf_nv = [cur["tfn"], tf_n]
+            tf_dv = [cur["tfd"], tf_d]
+            inj_nv = [cur["injn"], inj_n]
+            inj_dv = [cur["injd"], inj_d]
+            if rcfg.degrade:
+                tf_nv.append(safe[0])
+                tf_dv.append(safe[1])
+                inj_nv.append(safe[2])
+                inj_dv.append(safe[3])
+            jj = {k: v for k, v in j.items()
+                  if k not in ("ctrl_delay", "ctrl_ok")}
+            jj.update(conn=conn_e,
+                      tf_next_v=jnp.stack(tf_nv), tf_dep_v=jnp.stack(tf_dv),
+                      inj_next_v=jnp.stack(inj_nv),
+                      inj_dep_v=jnp.stack(inj_dv),
+                      vsel=vsel, vsel_t0=t0,
+                      first_direct=routing_jnp.first_direct_offsets(conn_e))
+            step = _make_step(jj, cfg, True, num_flows)
+            state, ys = jax.lax.scan(step, state, tis)
+
+            # 4c. ToRs that switched inside the epoch now *own* this
+            # epoch's tables (node axis 1 of [Tr, N, D, K])
+            sw = switch_t <= t0 + E - 1
+            swt = sw[None, :, None, None]
+            cur = dict(tfn=jnp.where(swt, tf_n, cur["tfn"]),
+                       tfd=jnp.where(swt, tf_d, cur["tfd"]),
+                       injn=jnp.where(swt, inj_n, cur["injn"]),
+                       injd=jnp.where(swt, inj_d, cur["injd"]))
+            ver = jnp.where(sw, e, ver)
+            install_ver = ver
+            out_carry = (state, cur, ver)
+
         ys.update(hot_src=hot_src, hot_dst=hot_dst,
                   demand_total=jnp.sum(jnp.where(rem, j["size"], 0)),
-                  epoch_conn=conn_e, failed_links=n_failed)
-        return state, ys
+                  epoch_conn=conn_e, failed_links=n_failed,
+                  install_ver=install_ver, install_lat=install_lat,
+                  install_retries=retries_used, degraded=degraded)
+        return out_carry, ys
 
     state0 = _init_state(j, num_flows)
-    final, ys = jax.lax.scan(epoch, state0,
-                             jnp.arange(rcfg.num_epochs, dtype=jnp.int32))
+    if has_ctrl:
+        carry0 = (state0,
+                  dict(tfn=boot[0], tfd=boot[1], injn=boot[2], injd=boot[3]),
+                  jnp.full((N,), -1, jnp.int32))
+    else:
+        carry0 = state0
+    final_carry, ys = jax.lax.scan(epoch, carry0,
+                                   jnp.arange(rcfg.num_epochs,
+                                              dtype=jnp.int32))
+    final = final_carry[0] if has_ctrl else final_carry
     S = rcfg.num_epochs * E
     flat = lambda a: a.reshape((S,) + a.shape[2:])
     return dict(
@@ -289,4 +498,6 @@ def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         demand_total=ys["demand_total"],
         epoch_conn=ys["epoch_conn"],
         failed_links=ys["failed_links"],
+        install_ver=ys["install_ver"], install_lat=ys["install_lat"],
+        install_retries=ys["install_retries"], degraded=ys["degraded"],
     )

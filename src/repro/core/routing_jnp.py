@@ -31,13 +31,16 @@ shaped, and O(T * N^2 * kpaths * log T) — no host round-trip.
 
 Numeric range
 -------------
-The numpy reference computes the lexicographic (arrival-slice, hops) metric in
-int64; on-device we use int32 (x64 is disabled by default in JAX). Both paths
-derive tables only from *equalities between finite costs*, which are identical
-integers in either width, so bit-identity holds as long as finite costs stay
-below the int32 sentinel — guaranteed by a static shape check
-(``H * B < 2**29`` with ``H = 2T``; holds for any schedule up to ~500 nodes of
-round-robin, far past the paper's 108-ToR testbed).
+The numpy reference fuses the lexicographic (arrival-slice, hops) metric into
+one int64 scalar (``arrival * B + hops``); x64 is disabled by default in JAX,
+and for large schedules the fused value overflows int32. On-device the metric
+is therefore carried *unfused*: two int32 components ``(arrival, hops)``
+compared lexicographically, with the unreachable sentinel ``(JINF, 0)``.
+Since ``hops < B`` always, fused equality and pairwise component equality
+coincide, and the compiled tables — which derive only from equalities between
+finite costs — are bit-identical to the numpy reference at any schedule size
+(no static range guard; previously the int32 fusion capped the device DP near
+~108 ToRs of round-robin).
 """
 from __future__ import annotations
 
@@ -56,60 +59,64 @@ __all__ = [
     "SCHEMES",
 ]
 
-# int32 unreachable sentinel (numpy reference uses 1 << 40 in int64; only
+# int32 unreachable sentinel for the arrival component; an unreachable cell
+# is ``(JINF, 0)`` (numpy's fused reference uses 1 << 40 in int64; only
 # equalities between finite costs matter for the compiled tables).
 JINF = jnp.int32(1 << 30)
 
 SCHEMES = ("direct", "vlb", "opera", "ucmp", "hoho")
 
 
-def _dp_B(T: int, max_hop: int) -> int:
-    H = 2 * T
-    return (max_hop + H) * (H + 2) + 1
-
-
-def _check_range(T: int, max_hop: int) -> None:
-    H = 2 * T
-    B = _dp_B(T, max_hop)
-    if H * B + H + 2 >= (1 << 29):
-        raise ValueError(
-            f"schedule too large for the int32 device DP: T={T}, "
-            f"max_hop={max_hop} needs cost range {H * B + H + 2} >= 2^29; "
-            "use the numpy compiler (compile_impl='numpy')")
-
-
 def time_dp_all(conn: jnp.ndarray, max_hop: int = 4) -> jnp.ndarray:
     """Backward DP over the time-expanded graph, batched over all
-    destinations: ``cost[t, n, d]``, jnp port of
-    :func:`repro.core.routing._time_dp_all` (same recurrence, int32).
+    destinations: ``cost[t, n, d, :] = (arrival, hops)``, jnp port of
+    :func:`repro.core.routing._time_dp_all` with the lexicographic metric
+    carried as two int32 components instead of one fused int64 (see the
+    module docstring — bit-identical tables at any schedule size).
 
-    One ``lax.scan`` step per time slice, one gather + minimum per uplink —
-    identical device-side structure to the fabric's per-slice scan.
+    One ``lax.scan`` step per time slice, one gather + lexicographic
+    minimum per uplink — identical device-side structure to the fabric's
+    per-slice scan. ``max_hop`` is kept for signature compatibility with
+    the numpy reference (it only sized the fused encoding; the recurrence
+    itself advances one slice per hop either way).
     """
+    del max_hop
     T, N, U = conn.shape
-    _check_range(T, max_hop)
     H = 2 * T
-    B = _dp_B(T, max_hop)
     diag = jnp.arange(N, dtype=jnp.int32)
-    cost_H = jnp.full((N, N), JINF, jnp.int32).at[diag, diag].set(
-        jnp.int32(H * B))
+    arr_H = jnp.full((N, N), JINF, jnp.int32).at[diag, diag].set(jnp.int32(H))
+    hop_H = jnp.zeros((N, N), jnp.int32)
 
-    def step(cost_next, t):
-        c = cost_next
+    def step(carry, t):
+        ca, ch = carry
+        arr_next, hop_next = carry
         conn_t = conn[t % T]                      # [N, U]
         for k in range(U):
             peer = conn_t[:, k]
             ok = peer >= 0
-            pc = cost_next[jnp.clip(peer, 0, N - 1)]          # [N, D]
-            pc = jnp.where(peer[:, None] == diag[None, :], t * B, pc)
-            cand = jnp.where(ok[:, None], pc + 1, JINF)
-            c = jnp.minimum(c, cand)
-        c = c.at[diag, diag].set(t * B)
-        return c, c
+            pclip = jnp.clip(peer, 0, N - 1)
+            pa = arr_next[pclip]                              # [N, D]
+            ph = hop_next[pclip]
+            at_dst = peer[:, None] == diag[None, :]
+            pa = jnp.where(at_dst, t, pa)
+            ph = jnp.where(at_dst, 0, ph)
+            cand_a = jnp.where(ok[:, None], pa, JINF)
+            cand_h = jnp.where(ok[:, None], ph + 1, 0)
+            # lexicographic minimum; an unreachable candidate (cand_a ==
+            # JINF, cand_h >= 1) never beats the (JINF, 0) sentinel, so
+            # the sentinel invariant is preserved
+            take = (cand_a < ca) | ((cand_a == ca) & (cand_h < ch))
+            ca = jnp.where(take, cand_a, ca)
+            ch = jnp.where(take, cand_h, ch)
+        ca = ca.at[diag, diag].set(t)
+        ch = ch.at[diag, diag].set(0)
+        return (ca, ch), (ca, ch)
 
     ts = jnp.arange(H - 1, -1, -1, dtype=jnp.int32)
-    _, rows = jax.lax.scan(step, cost_H, ts)      # rows: t = H-1 .. 0
-    return jnp.concatenate([jnp.flip(rows, axis=0), cost_H[None]], axis=0)
+    _, (rows_a, rows_h) = jax.lax.scan(step, (arr_H, hop_H), ts)
+    arr = jnp.concatenate([jnp.flip(rows_a, axis=0), arr_H[None]], axis=0)
+    hop = jnp.concatenate([jnp.flip(rows_h, axis=0), hop_H[None]], axis=0)
+    return jnp.stack([arr, hop], axis=-1)         # [H+1, N, D, 2]
 
 
 def dp_tables(conn: jnp.ndarray, max_hop: int = 4, kpaths: int = 4):
@@ -123,11 +130,10 @@ def dp_tables(conn: jnp.ndarray, max_hop: int = 4, kpaths: int = 4):
     with a batched ``searchsorted`` and validated against ``t``'s cost run.
     """
     T, N, U = conn.shape
-    _check_range(T, max_hop)
     H = 2 * T
-    B = _dp_B(T, max_hop)
-    cost = time_dp_all(conn, max_hop)             # [H+1, N, D]
-    costH = cost[:H]
+    cost = time_dp_all(conn, max_hop)             # [H+1, N, D, 2]
+    costH_a = cost[:H, :, :, 0]
+    costH_h = cost[:H, :, :, 1]
     diag = jnp.arange(N, dtype=jnp.int32)
     tts = jnp.arange(H, dtype=jnp.int32)
     peer = conn[tts % T]                          # [H, N, U]
@@ -143,15 +149,19 @@ def dp_tables(conn: jnp.ndarray, max_hop: int = 4, kpaths: int = 4):
     dup = jnp.stack(dup_cols, axis=2)             # [H, N, U]
 
     # match[tt, n, u, d]: hopping n -> peer(tt, u) attains cost[tt, n, d]
+    # (both lexicographic components; the finite guard mirrors numpy's
+    # INF + 1 != INF at unreachable cells)
     match_cols = []
     for u in range(U):
         p_u = peer[:, :, u]
         pc = jnp.clip(p_u, 0, N - 1)
-        val = cost[1:][tts[:, None], pc]          # cost[tt+1, peer, d]
-        val = jnp.where(p_u[..., None] == diag[None, None, :],
-                        (tts * B)[:, None, None], val)
+        val = cost[1:][tts[:, None], pc]          # cost[tt+1, peer, d, :]
+        at_dst = p_u[..., None] == diag[None, None, :]
+        va = jnp.where(at_dst, tts[:, None, None], val[..., 0])
+        vh = jnp.where(at_dst, 0, val[..., 1])
         match_cols.append(
-            (ok[:, :, u] & ~dup[:, :, u])[..., None] & (val + 1 == costH))
+            (ok[:, :, u] & ~dup[:, :, u])[..., None] & (va == costH_a)
+            & (vh + 1 == costH_h) & (costH_a < JINF))
     match = jnp.stack(match_cols, axis=2)         # [H, N, U, D] bool
 
     evcount = match.sum(axis=2, dtype=jnp.int32)  # [H, N, D]
@@ -172,10 +182,11 @@ def dp_tables(conn: jnp.ndarray, max_hop: int = 4, kpaths: int = 4):
 
     nn = diag[None, :, None, None]
     dd = diag[None, None, :, None]
-    cost_t = costH[:T][:, :, :, None]
-    cost_tt = costH[tt_c, nn, dd]
-    valid = (g < total[None, :, :, None]) & (cost_tt == cost_t) \
-        & (cost_t < JINF)
+    cost_ta = costH_a[:T][:, :, :, None]
+    cost_th = costH_h[:T][:, :, :, None]
+    valid = (g < total[None, :, :, None]) \
+        & (costH_a[tt_c, nn, dd] == cost_ta) \
+        & (costH_h[tt_c, nn, dd] == cost_th) & (cost_ta < JINF)
     r_w = g - C[tt_c, nn, dd]                     # within-slice event rank
 
     urank = jnp.cumsum(match, axis=2, dtype=jnp.int32) \

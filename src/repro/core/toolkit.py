@@ -15,7 +15,8 @@ import numpy as np
 from .routing import CompiledRouting
 from .topology import Schedule
 
-__all__ = ["trace_packet", "format_schedule", "check_tables"]
+__all__ = ["trace_packet", "format_schedule", "check_tables",
+           "check_tables_mixed"]
 
 
 def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
@@ -82,7 +83,9 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
                  hashes: tuple[int, ...] = (0,),
                  max_steps: int = 64, link_fail: np.ndarray | None = None,
                  check_walks: bool = True,
-                 t0s: "tuple[int, ...] | range | None" = None) -> list[str]:
+                 t0s: "tuple[int, ...] | range | None" = None,
+                 old_routing: CompiledRouting | None = None,
+                 upgraded: np.ndarray | None = None) -> list[str]:
     """Time-flow invariant checker: verify a compiled routing against the
     schedule it was compiled for. Returns a list of human-readable violation
     messages (empty = all invariants hold) so tests can assert
@@ -135,12 +138,55 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
     ~100x, which is what makes paper-scale 108-ToR sweeps feasible); the
     scalar reference walk is kept as :func:`_check_walk` and re-run only on
     violating walks to produce the narrated message.
+
+    **Mixed-version mode** (``old_routing`` + ``upgraded``): model a
+    versioned table install caught mid-window — ToRs with
+    ``upgraded[node]`` True answer lookups from ``routing`` (the new
+    tables), the rest from ``old_routing`` — and check that the blend is
+    still sound. This is the soundness statement behind
+    :func:`repro.core.reconfigure.reconfigure`'s two-phase install: any
+    activation order must be safe, not just the all-at-once swap. Static
+    invariants are skipped (each version passes them against its own
+    schedule; the mixed hazard is *walks* crossing version boundaries),
+    and a dark circuit ends the walk OK rather than violating — the
+    fabric defers such packets to the next live slice (§5.2), so a stale
+    entry pointing at a torn-down circuit costs latency, not correctness.
+    Loops, negative departures and hop-bound breaches across the version
+    boundary remain violations. Both routings must share the table cycle
+    and slot width; :func:`check_tables_mixed` sweeps a canonical family
+    of ``upgraded`` subsets so callers don't pick them by hand.
     """
     bad: list[str] = []
     T, N, _U = sched.conn.shape
     tf_n, tf_d = routing.tf_next, routing.tf_dep
     inj_n, inj_d = routing.inj_next, routing.inj_dep
     Tr = routing.num_slices
+    if (old_routing is None) != (upgraded is None):
+        raise ValueError("old_routing and upgraded must be passed together")
+    if old_routing is not None:
+        if old_routing.num_slices != Tr:
+            raise ValueError("mixed-version check needs matching table "
+                             f"cycles (old {old_routing.num_slices}, "
+                             f"new {Tr})")
+        if old_routing.tf_next.shape[-1] != tf_n.shape[-1]:
+            raise ValueError("mixed-version check needs matching slot "
+                             "widths")
+        upgraded = np.asarray(upgraded, dtype=bool)
+        if upgraded.shape != (N,):
+            raise ValueError(f"upgraded must be a [{N}] bool mask")
+        viol = _check_walks_vec(sched, routing, hashes, max_hops,
+                                require_delivery, max_steps, link_fail,
+                                range(math.lcm(T, Tr)) if t0s is None else t0s,
+                                old_routing, upgraded)
+        for src, dst, t0, hashv in viol:
+            msg = _check_walk(sched, routing, src, dst, t0, hashv, max_hops,
+                              require_delivery, max_steps, link_fail,
+                              old_routing, upgraded)
+            assert msg is not None, "vectorized walk flagged a clean scalar walk"
+            bad.append("mixed " + msg)
+            if len(bad) > 64:
+                return bad
+        return bad
 
     for name, nxt, dep in (("tf", tf_n, tf_d), ("inj", inj_n, inj_d)):
         valid = nxt >= 0
@@ -192,13 +238,57 @@ def check_tables(sched: Schedule, routing: CompiledRouting,
     return bad
 
 
+def check_tables_mixed(sched: Schedule, old_routing: CompiledRouting,
+                       new_routing: CompiledRouting, max_hops: int = 16,
+                       hashes: tuple[int, ...] = (0,), max_steps: int = 64,
+                       t0s: "tuple[int, ...] | range | None" = None,
+                       seed: int = 0, n_random: int = 4) -> list[str]:
+    """Sweep :func:`check_tables` mixed-version mode over a canonical family
+    of ``upgraded`` subsets: the two pure endpoints, every single-ToR
+    upgrade, the two prefix halves, and ``n_random`` seeded random subsets.
+    A two-phase install can activate ToRs in any order, so soundness must
+    hold for *every* subset; this family covers the endpoints, all
+    boundaries a lone straggler/early adopter creates, and a handful of
+    arbitrary blends. ``sched`` is the schedule being installed (the new
+    one). Returns violation messages tagged with the subset that produced
+    them (empty = sound across the install window)."""
+    N = sched.num_nodes
+    subsets: list[tuple[str, np.ndarray]] = [
+        ("none", np.zeros(N, bool)), ("all", np.ones(N, bool))]
+    for n in range(N):
+        one = np.zeros(N, bool)
+        one[n] = True
+        subsets.append((f"only[{n}]", one))
+        subsets.append((f"all-but[{n}]", ~one))
+    half = np.arange(N) < N // 2
+    subsets.append(("first-half", half))
+    subsets.append(("second-half", ~half))
+    rng = np.random.default_rng(seed)
+    for i in range(n_random):
+        subsets.append((f"random[{i}]", rng.random(N) < 0.5))
+    bad: list[str] = []
+    for tag, up in subsets:
+        for msg in check_tables(sched, new_routing, max_hops=max_hops,
+                                require_delivery=False, hashes=hashes,
+                                max_steps=max_steps, t0s=t0s,
+                                old_routing=old_routing, upgraded=up):
+            bad.append(f"[upgraded={tag}] {msg}")
+            if len(bad) > 64:
+                return bad
+    return bad
+
+
 def _check_walks_vec(sched: Schedule, routing: CompiledRouting, hashes,
                      max_hops: int, require_delivery: bool, max_steps: int,
-                     link_fail: np.ndarray | None, t0s) -> list[tuple]:
+                     link_fail: np.ndarray | None, t0s,
+                     old_routing: CompiledRouting | None = None,
+                     upgraded: np.ndarray | None = None) -> list[tuple]:
     """Vectorized table walks: advance *all* (src, dst, t0) walks of each
     hash in lock-step (same semantics as :func:`_check_walk`, one batched
     gather per step). Returns the violating (src, dst, t0, hash) tuples in
-    the scalar sweep's (src, dst, t0, hash) iteration order."""
+    the scalar sweep's (src, dst, t0, hash) iteration order. With
+    ``old_routing``/``upgraded``, non-upgraded nodes answer from the old
+    tables and dark circuits end walks OK (mixed-version semantics)."""
     Tr = routing.num_slices
     Ts, N = sched.num_slices, sched.num_nodes
     from .routing import _has_circuit_grid
@@ -229,6 +319,12 @@ def _check_walks_vec(sched: Schedule, routing: CompiledRouting, hashes,
             tbl_d = routing.inj_dep if step == 0 else routing.tf_dep
             row_n = tbl_n[t % Tr, node, dst0]            # [W, K]
             row_d = tbl_d[t % Tr, node, dst0]
+            if old_routing is not None:
+                otbl_n = old_routing.inj_next if step == 0 else old_routing.tf_next
+                otbl_d = old_routing.inj_dep if step == 0 else old_routing.tf_dep
+                un = upgraded[node][:, None]             # each hop answers
+                row_n = np.where(un, row_n, otbl_n[t % Tr, node, dst0])
+                row_d = np.where(un, row_d, otbl_d[t % Tr, node, dst0])
             nvalid = (row_n >= 0).sum(axis=-1)
             stuck = act & (nvalid == 0)
             code[stuck] = VIOL if require_delivery else OK
@@ -241,7 +337,9 @@ def _check_walks_vec(sched: Schedule, routing: CompiledRouting, hashes,
             wire = t + off
             opt = nxt < N
             dark = act & opt & ~has[wire % Ts, node, np.clip(nxt, 0, N - 1)]
-            code[dark] = VIOL                            # dark/failed circuit
+            # mixed mode: the fabric defers a stale entry's dark tx, so the
+            # walk ends OK; single-version tables must never go dark
+            code[dark] = OK if old_routing is not None else VIOL
             act = code == ACTIVE
             node = np.where(act, np.where(opt, nxt, dst0), node)
             t = np.where(act, np.where(opt, wire, wire + 1), t)
@@ -262,19 +360,24 @@ def _check_walks_vec(sched: Schedule, routing: CompiledRouting, hashes,
 def _check_walk(sched: Schedule, routing: CompiledRouting, src: int,
                 dst: int, t0: int, hashv: int, max_hops: int,
                 require_delivery: bool, max_steps: int,
-                link_fail: np.ndarray | None = None) -> str | None:
+                link_fail: np.ndarray | None = None,
+                old_routing: CompiledRouting | None = None,
+                upgraded: np.ndarray | None = None) -> str | None:
     """One table walk (same semantics as :func:`trace_packet`); returns a
     violation message or None. This is the scalar reference for
     :func:`_check_walks_vec`, kept to narrate the violations it finds."""
     T = routing.num_slices
     node, t, hops = src, t0, 0
-    tbl_next, tbl_dep = routing.inj_next, routing.inj_dep
+    step0 = True
     where = f"walk {src}->{dst} @t0={t0} h={hashv}"
     for _ in range(max_steps):
         if node == dst:
             if hops > max_hops:
                 return f"{where}: delivered in {hops} hops > max_hops={max_hops}"
             return None
+        rt = routing if old_routing is None or upgraded[node] else old_routing
+        tbl_next = rt.inj_next if step0 else rt.tf_next
+        tbl_dep = rt.inj_dep if step0 else rt.tf_dep
         row_n = tbl_next[t % T, node, dst]
         row_d = tbl_dep[t % T, node, dst]
         nvalid = int((row_n >= 0).sum())
@@ -288,16 +391,20 @@ def _check_walk(sched: Schedule, routing: CompiledRouting, src: int,
             return f"{where}: time moves backwards at node {node} (dep {off})"
         wire_t = t + off
         if nxt < sched.num_nodes:
-            if link_fail is not None and link_fail[node, nxt]:
-                return (f"{where}: rides failed link {node}->{nxt} "
-                        f"at slice {wire_t}")
-            if not sched.has_circuit(node, nxt, wire_t):
+            dead = (link_fail is not None and link_fail[node, nxt]) \
+                or not sched.has_circuit(node, nxt, wire_t)
+            if dead:
+                if old_routing is not None:
+                    return None          # mixed mode: fabric defers, walk OK
+                if link_fail is not None and link_fail[node, nxt]:
+                    return (f"{where}: rides failed link {node}->{nxt} "
+                            f"at slice {wire_t}")
                 return (f"{where}: rides dark circuit {node}->{nxt} "
                         f"at slice {wire_t}")
             node, t = nxt, wire_t
         else:
             node, t = dst, wire_t + 1    # electrical egress: 1-slice transit
-        tbl_next, tbl_dep = routing.tf_next, routing.tf_dep
+        step0 = False
         hops += 1
         if hops > max_hops:
             return f"{where}: exceeds max_hops={max_hops} without delivery"

@@ -14,12 +14,14 @@ if importlib.util.find_spec("hypothesis") is None:
     if os.environ.get("CI"):
         raise RuntimeError(
             "hypothesis is not installed but CI=1: the property-based "
-            "suites (test_admission_prop, test_failures_prop, "
-            "test_invariants_prop, test_routing, test_topology, "
-            "test_kernels, test_distributed, test_optim) would be "
-            "silently skipped. Install hypothesis in the CI environment.")
+            "suites (test_admission_prop, test_controlplane_prop, "
+            "test_failures_prop, test_invariants_prop, test_routing, "
+            "test_topology, test_kernels, test_distributed, test_optim) "
+            "would be silently skipped. Install hypothesis in the CI "
+            "environment.")
     collect_ignore = [
         "test_admission_prop.py",
+        "test_controlplane_prop.py",
         "test_distributed.py",
         "test_failures_prop.py",
         "test_invariants_prop.py",

@@ -1,0 +1,537 @@
+"""Tests for the control-plane robustness subsystem
+(:mod:`repro.core.controlplane`).
+
+Load-bearing properties:
+
+* **zero-trace parity** — an *empty* control trace compiled to perfect
+  masks must leave ``simulate`` and ``reconfigure`` bit-identical to runs
+  without them (and without masks the traced program is literally the
+  pre-control one, so the fabric goldens stay untouched); skew *within*
+  the §7 guard band is absorbed and must also be bit-identical;
+* **skew semantics** — a whole-slice offset shifts the ToR's table
+  lookups, a residual beyond the guard band blocks its optical
+  transmissions (packets defer, electrical is exempt) until the heal;
+* **install arithmetic** — the device's per-epoch version decisions
+  (``install_ver`` / ``install_lat`` / ``install_retries``) replay
+  exactly on the host via :func:`repro.core.controlplane.install_schedule`;
+* **2PC vs hotswap** — 2PC is all-or-nothing (one deaf ToR keeps the
+  whole fabric on the old version), hotswap flips ToRs unilaterally
+  (mixed-version epochs), degrade falls back to safe mode on timeout or
+  out-of-band skew and re-promotes when acks recover;
+* **mixed-version soundness** — ``check_tables_mixed`` proves any
+  activation order safe across the install window for all 8 schemes.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ControlMasks, ControlTrace, FabricConfig,
+                        FabricTables, ReconfigConfig, clos_routing,
+                        compile_control, direct, ecmp, hoho, install_schedule,
+                        ksp, opera, OpenOpticsNet, random_control_trace,
+                        reconfigure, round_robin, simulate, synthesize,
+                        toolkit, ucmp, vlb, wcmp)
+from repro.core.controlplane import NEVER, OPEN_END, ControlEvent
+from repro.core.fabric import Workload
+from repro.core.topology import Schedule
+
+N_TORS = 8
+SLICE_BYTES = 10_000
+SLICE_NS = 2000.0          # default guardband-derived slice duration
+GUARD_NS = 200.0
+
+
+def _workload(load=0.5, seed=3, max_packets=1500):
+    return synthesize("rpc", N_TORS, 40, slice_bytes=SLICE_BYTES, load=load,
+                      max_packets=max_packets, seed=seed)
+
+
+def _pair_workload(src, dst, P=800, t_hi=30, seed=0):
+    rng = np.random.default_rng(seed)
+    return Workload(
+        src=np.full(P, src, np.int32), dst=np.full(P, dst, np.int32),
+        size=np.full(P, 1000, np.int32),
+        t_inject=rng.integers(0, t_hi, P).astype(np.int32),
+        flow=(np.arange(P, dtype=np.int32) % 16),
+        seq=np.arange(P, dtype=np.int32) // 16,
+        is_eleph=np.zeros(P, bool))
+
+
+# ---------------------------------------------------------------------------
+# control traces -> masks
+# ---------------------------------------------------------------------------
+
+
+def test_skew_phase_and_residual():
+    tr = ControlTrace().skew(2, 2 * SLICE_NS, 5, 15).skew(3, 900.0, 0, 10)
+    m = compile_control(tr, 20, N_TORS)
+    assert (m.phase_off[5:15, 2] == 2).all()        # whole slices -> offset
+    assert (m.phase_off[:5, 2] == 0).all() and (m.phase_off[15:, 2] == 0).all()
+    assert not m.skew_miss[:, 2].any()              # zero residual: no miss
+    assert (m.phase_off[:, 3] == 0).all()           # 900ns rounds to 0 slices
+    assert m.skew_miss[:10, 3].all()                # residual > guard band
+    assert not m.skew_miss[10:, 3].any()
+    # negative skew: phase_off goes negative, residual still guarded
+    m2 = compile_control(ControlTrace().skew(1, -SLICE_NS - 50.0, 0), 5, N_TORS)
+    assert (m2.phase_off[:, 1] == -1).all()
+    assert not m2.skew_miss[:, 1].any()             # |resid| = 50 <= 200
+
+
+def test_drift_accumulates():
+    m = compile_control(ControlTrace().drift(4, 500.0, 2, 12), 16, N_TORS)
+    steps = np.arange(2, 12) - 2 + 1
+    np.testing.assert_allclose(m.skew_ns[2:12, 4], 500.0 * steps)
+    # slice 4 has accumulated 1500ns: phase 1, residual -500 -> miss
+    assert m.phase_off[4, 4] == 1 and m.skew_miss[4, 4]
+    assert m.phase_off[5, 4] == 1 and not m.skew_miss[5, 4]   # 2000 exact
+    assert (m.skew_ns[12:, 4] == 0.0).all()         # heal ends the drift
+
+
+def test_stall_delays_all_sends():
+    m = compile_control(ControlTrace().stall(3, 8), 12, N_TORS)
+    for ts in range(3, 8):
+        assert (m.ctrl_delay[ts] == 8 - ts).all()   # wait out the stall
+    assert (m.ctrl_delay[:3] == 0).all() and (m.ctrl_delay[8:] == 0).all()
+    with pytest.raises(ValueError, match="stall"):
+        ControlTrace().stall(3, OPEN_END)           # needs a finite end
+
+
+def test_install_delay_and_loss_compose():
+    tr = (ControlTrace().install_delay(3, 0, 10, node=2)
+          .install_delay(2, 5, 10, node=2)
+          .install_loss(0.5, 0, 10).install_loss(0.5, 0, 10, node=6))
+    m = compile_control(tr, 12, N_TORS, seed=9)
+    assert (m.ctrl_delay[:5, 2] == 3).all()
+    assert (m.ctrl_delay[5:10, 2] == 5).all()       # delays add
+    assert (m.ctrl_delay[:, 3] == 0).all()
+    # loss composes per-message: node 6 sees 1-(1-.5)(1-.5) = .75
+    drops = ~m.ctrl_ok
+    assert drops[:10].mean() > 0.2                  # base 0.5 everywhere
+    assert drops[:10, 6].mean() >= drops[:10, 5].mean()
+    assert m.ctrl_ok[10:].all()
+    m2 = compile_control(tr, 12, N_TORS, seed=9)
+    np.testing.assert_array_equal(m.ctrl_ok, m2.ctrl_ok)   # seeded
+    # loss=1.0 is deterministic: every message in the window drops
+    m3 = compile_control(ControlTrace().install_loss(1.0, 0, 4), 6, N_TORS)
+    assert not m3.ctrl_ok[:4].any() and m3.ctrl_ok[4:].all()
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        ControlEvent("sunspot", 0, 10)
+    with pytest.raises(ValueError, match="window"):
+        ControlTrace().skew(0, 100.0, 10, 10)
+    with pytest.raises(ValueError, match="node"):
+        ControlTrace().skew(-1, 100.0, 0)
+    with pytest.raises(ValueError, match="loss"):
+        ControlTrace().install_loss(1.5, 0)
+    with pytest.raises(ValueError, match="delay"):
+        ControlTrace().install_delay(-1, 0)
+    with pytest.raises(ValueError, match="node"):
+        compile_control(ControlTrace().skew(N_TORS, 100.0, 0), 10, N_TORS)
+    with pytest.raises(ValueError, match="slice_ns"):
+        compile_control(ControlTrace(), 10, N_TORS, slice_ns=0.0)
+    m = ControlMasks.perfect(10, 4)
+    with pytest.raises(ValueError, match="cover"):
+        m.validate(11, 4)
+    sched = round_robin(4, 1)
+    wl = _pair_workload(0, 1, P=10, t_hi=2)
+    with pytest.raises(ValueError, match="cover"):
+        simulate(FabricTables.build(sched, direct(sched)), wl,
+                 FabricConfig(), 20, control=m)
+    with pytest.raises(ValueError, match="jnp"):
+        simulate(FabricTables.build(sched, direct(sched)), wl,
+                 FabricConfig(lookup_impl="bisect"), 20,
+                 control=ControlMasks.perfect(20, 4))
+
+
+def test_random_control_trace_reproducible():
+    a = random_control_trace(7, N_TORS, 50)
+    b = random_control_trace(7, N_TORS, 50)
+    assert a.events == b.events
+    assert random_control_trace(8, N_TORS, 50).events != a.events
+    m = compile_control(a, 50, N_TORS)
+    m.validate(50, N_TORS)
+
+
+def test_heal_drops_future_events():
+    tr = ControlTrace().skew(1, 300.0, 5).install_loss(0.5, 15)
+    tr.heal_all(10)
+    assert len(tr.events) == 1 and tr.events[0].t_end == 10
+    assert not tr.active_in(10, 40)
+
+
+# ---------------------------------------------------------------------------
+# zero-trace / in-guard-band parity
+# ---------------------------------------------------------------------------
+
+
+SIM_FIELDS = ("t_deliver", "loc_final", "nhops", "delivered_bytes", "dropped",
+              "buf_bytes", "offl_bytes", "blocked_inj", "slice_miss",
+              "reorder_cnt")
+
+
+def _assert_sim_equal(a, b):
+    for f in SIM_FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+
+
+@pytest.mark.parametrize("cfg", [
+    FabricConfig(slice_bytes=SLICE_BYTES),
+    FabricConfig(slice_bytes=SLICE_BYTES, pushback=True, offload=True),
+    FabricConfig(slice_bytes=SLICE_BYTES, elec_bytes=2000, flow_pausing=True),
+], ids=["base", "pushback-offload", "hybrid-pausing"])
+def test_empty_trace_bit_identical_simulate(cfg):
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    tables = FabricTables.build(sched, vlb(sched))
+    ctrl = compile_control(ControlTrace(), 48, N_TORS)
+    _assert_sim_equal(simulate(tables, wl, cfg, 48),
+                      simulate(tables, wl, cfg, 48, control=ctrl))
+
+
+def test_skew_within_guardband_bit_identical():
+    """Skew the guard band absorbs (|residual| <= guardband_ns) must not
+    change a single bit — that is what the §7 margin is *for*."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, hoho(sched))
+    tr = ControlTrace().skew(2, GUARD_NS, 0).skew(5, -GUARD_NS / 2, 0)
+    ctrl = compile_control(tr, 48, N_TORS)
+    assert not ctrl.skew_miss.any() and (ctrl.phase_off == 0).all()
+    _assert_sim_equal(simulate(tables, wl, cfg, 48),
+                      simulate(tables, wl, cfg, 48, control=ctrl))
+
+
+@pytest.mark.parametrize("install", ["hotswap", "2pc"])
+def test_empty_trace_bit_identical_reconfigure(install):
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=12, num_epochs=3, scheme="hoho",
+                          k_hot=2, install=install, install_timeout=8,
+                          degrade=(install == "2pc"))
+    ctrl = compile_control(ControlTrace(), 36, N_TORS)
+    a = reconfigure(sched, wl, cfg, rcfg)
+    b = reconfigure(sched, wl, cfg, rcfg, control=ctrl)
+    np.testing.assert_array_equal(a.t_deliver, b.t_deliver)
+    np.testing.assert_array_equal(a.delivered_bytes, b.delivered_bytes)
+    np.testing.assert_array_equal(a.epoch_conn, b.epoch_conn)
+    # perfect control plane: every install lands instantly and atomically
+    np.testing.assert_array_equal(
+        b.install_ver, np.repeat(np.arange(3)[:, None], N_TORS, axis=1))
+    assert (b.install_lat == 0).all() and (b.install_retries == 0).all()
+    assert not b.degraded.any()
+
+
+# ---------------------------------------------------------------------------
+# skew semantics in the jitted fabric
+# ---------------------------------------------------------------------------
+
+
+def test_whole_slice_skew_degrades_delivery():
+    """A ToR running a full slice early looks up its neighbours' tables one
+    slice out of phase: transmissions land on the wrong slice's circuits."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, direct(sched))
+    ctrl = compile_control(ControlTrace().skew(2, SLICE_NS, 0), 48, N_TORS)
+    base = simulate(tables, wl, cfg, 48)
+    skew = simulate(tables, wl, cfg, 48, control=ctrl)
+    assert skew.delivered_bytes.sum() < base.delivered_bytes.sum()
+
+
+def test_residual_skew_blocks_optical_until_heal():
+    """Out-of-band residual skew: the ToR's optical transmissions miss the
+    guard band and defer (§5.2) — nothing it sends optically is delivered
+    while the skew lasts, and the backlog drains after the heal."""
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, t_hi=10)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, direct(sched))
+    S = 80
+    ctrl = compile_control(ControlTrace().skew(2, 900.0, 0, 40), S, N_TORS)
+    res = simulate(tables, wl, cfg, S, control=ctrl)
+    done = res.t_deliver >= 0
+    assert not (res.t_deliver[done] < 40).any()     # deferred while skewed
+    assert done.any()                               # drains after the heal
+
+
+def test_skew_exempts_electrical():
+    """The electrical fabric has no slice clock: a skewed ToR's Clos
+    traffic flows normally."""
+    sched = round_robin(N_TORS, 1)
+    wl = _pair_workload(2, 5, t_hi=10)
+    cfg = FabricConfig(slice_bytes=0, elec_bytes=SLICE_BYTES)
+    tables = FabricTables.build(sched, clos_routing(N_TORS))
+    ctrl = compile_control(ControlTrace().skew(2, 900.0, 0), 60, N_TORS)
+    res = simulate(tables, wl, cfg, 60, control=ctrl)
+    base = simulate(tables, wl, cfg, 60)
+    _assert_sim_equal(base, res)
+
+
+# ---------------------------------------------------------------------------
+# versioned installs: device decisions replay on the host
+# ---------------------------------------------------------------------------
+
+
+def test_install_schedule_staggered_hand_case():
+    """Hand-built staggered install: node 1 delayed 3 slices, node 2 deaf
+    to the first attempt, node 3 deaf forever."""
+    tr = (ControlTrace().install_delay(3, 0, 10, node=1)
+          .install_loss(1.0, 0, 2, node=2)
+          .install_loss(1.0, 0, 10, node=3))
+    m = compile_control(tr, 10, 4)
+    info = install_schedule(m, 0, retries=2, backoff=2, timeout=8)
+    np.testing.assert_array_equal(info["arr"], [0, 3, 2, NEVER])
+    assert info["act"] == NEVER and not info["success"]
+    assert info["latency"] == -1 and info["retries_used"] == 2
+    # without the deaf ToR the second attempt completes the install
+    tr2 = (ControlTrace().install_delay(3, 0, 10, node=1)
+           .install_loss(1.0, 0, 2, node=2))
+    m2 = compile_control(tr2, 10, 4)
+    info2 = install_schedule(m2, 0, retries=2, backoff=2, timeout=8)
+    np.testing.assert_array_equal(info2["arr"], [0, 3, 2, 0])
+    assert info2["success"] and info2["act"] == 3
+    assert info2["latency"] == 3 and info2["retries_used"] == 1
+    with pytest.raises(ValueError, match="backoff"):
+        install_schedule(m, 0, backoff=0)
+
+
+def _replay_versions(m, E, n_ep, rcfg):
+    """Host replay of the per-epoch version state the device computes."""
+    N = m.num_nodes
+    ver = np.full(N, -1, np.int64)
+    rows, lats, rets = [], [], []
+    for e in range(n_ep):
+        t0 = e * E
+        if rcfg.install == "2pc":
+            info = install_schedule(m, t0, retries=rcfg.install_retries,
+                                    backoff=rcfg.install_backoff,
+                                    timeout=rcfg.install_timeout)
+            switch = np.full(N, info["act"] if info["success"] else NEVER)
+            lat, ret = info["latency"], info["retries_used"]
+        else:
+            info = install_schedule(m, t0, retries=0,
+                                    backoff=rcfg.install_backoff,
+                                    timeout=rcfg.install_timeout)
+            switch = info["arr"]
+            lat = info["act"] - t0 if info["act"] < NEVER else -1
+            ret = 0
+        ver = np.where(switch <= t0 + E - 1, e, ver)
+        rows.append(ver.copy())
+        lats.append(lat)
+        rets.append(ret)
+    return np.stack(rows), np.array(lats), np.array(rets)
+
+
+@pytest.mark.parametrize("install", ["hotswap", "2pc"])
+def test_reconfigure_install_matches_host_replay(install):
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    E, n_ep = 12, 4
+    rcfg = ReconfigConfig(epoch_slices=E, num_epochs=n_ep, scheme="hoho",
+                          k_hot=2, install=install, install_retries=2,
+                          install_backoff=2, install_timeout=8)
+    tr = (ControlTrace().install_loss(0.6, 0, 30)
+          .install_delay(2, 10, 26, node=3).stall(24, 28))
+    m = compile_control(tr, E * n_ep, N_TORS, seed=11)
+    res = reconfigure(sched, wl, cfg, rcfg, control=m)
+    ver, lat, ret = _replay_versions(m, E, n_ep, rcfg)
+    np.testing.assert_array_equal(res.install_ver, ver)
+    np.testing.assert_array_equal(res.install_lat, lat)
+    np.testing.assert_array_equal(res.install_retries, ret)
+
+
+def test_2pc_atomic_vs_hotswap_unilateral():
+    """One permanently deaf ToR: 2PC keeps the *whole* fabric on the boot
+    tables (all-or-nothing), hotswap upgrades everyone else (mixed)."""
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    base = dict(epoch_slices=12, num_epochs=3, scheme="hoho", k_hot=2,
+                install_timeout=8)
+    m = compile_control(ControlTrace().install_loss(1.0, 0, node=5),
+                        36, N_TORS)
+    two = reconfigure(sched, wl, cfg,
+                      ReconfigConfig(**base, install="2pc"), control=m)
+    hot = reconfigure(sched, wl, cfg,
+                      ReconfigConfig(**base, install="hotswap"), control=m)
+    assert (two.install_ver == -1).all()
+    assert (two.install_lat == -1).all()
+    others = np.arange(N_TORS) != 5
+    np.testing.assert_array_equal(
+        hot.install_ver[:, others],
+        np.repeat(np.arange(3)[:, None], N_TORS - 1, axis=1))
+    assert (hot.install_ver[:, 5] == -1).all()
+    # both keep delivering on the boot tables' base cycle
+    assert two.delivered_bytes.sum() > 0 and hot.delivered_bytes.sum() > 0
+
+
+def test_degrade_falls_back_and_repromotes():
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    E, n_ep = 12, 4
+    rcfg = ReconfigConfig(epoch_slices=E, num_epochs=n_ep, scheme="hoho",
+                          k_hot=2, install="2pc", install_timeout=8,
+                          degrade=True)
+    # installs deaf for epochs 0-1, clean after
+    m = compile_control(ControlTrace().install_loss(1.0, 0, 2 * E),
+                        E * n_ep, N_TORS)
+    res = reconfigure(sched, wl, cfg, rcfg, control=m)
+    np.testing.assert_array_equal(res.degraded, [True, True, False, False])
+    assert (res.install_ver[:2] == -1).all()
+    assert (res.install_ver[2] == 2).all() and (res.install_ver[3] == 3).all()
+    assert (res.install_lat[:2] == -1).all() and (res.install_lat[2:] >= 0).all()
+    # out-of-band skew alone also degrades, without blocking the install
+    m2 = compile_control(ControlTrace().skew(1, 900.0, E, 2 * E),
+                         E * n_ep, N_TORS)
+    res2 = reconfigure(sched, wl, cfg, rcfg, control=m2)
+    np.testing.assert_array_equal(res2.degraded, [False, True, False, False])
+    np.testing.assert_array_equal(
+        res2.install_ver, np.repeat(np.arange(n_ep)[:, None], N_TORS, axis=1))
+
+
+def test_reconfigure_rejects_bad_control_config():
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    with pytest.raises(ValueError, match="install"):
+        reconfigure(sched, wl, cfg, ReconfigConfig(
+            epoch_slices=12, num_epochs=2, install="paxos"))
+    with pytest.raises(ValueError, match="degrade"):
+        reconfigure(sched, wl, cfg, ReconfigConfig(
+            epoch_slices=12, num_epochs=2, install="hotswap", degrade=True))
+    with pytest.raises(ValueError, match="degrade"):
+        reconfigure(sched, wl, cfg, ReconfigConfig(
+            epoch_slices=12, num_epochs=2, install="2pc", degrade=True,
+            scheduler="edmonds"))
+    m = compile_control(ControlTrace(), 24, N_TORS)
+    with pytest.raises(ValueError, match="install_timeout"):
+        reconfigure(sched, wl, cfg, ReconfigConfig(
+            epoch_slices=12, num_epochs=2, install="2pc",
+            install_timeout=13), control=m)
+
+
+# ---------------------------------------------------------------------------
+# mixed-version soundness (toolkit)
+# ---------------------------------------------------------------------------
+
+
+ALL_SCHEMES = [("direct", direct), ("vlb", vlb), ("opera", opera),
+               ("ucmp", ucmp), ("hoho", hoho), ("ecmp", ecmp),
+               ("wcmp", wcmp), ("ksp", ksp)]
+
+
+def _install_pair(alg, k_hot=2):
+    """The reconfigure shape: old tables over the base cycle + dark hot
+    slices, new tables over the base cycle + populated hot slices."""
+    base = round_robin(N_TORS, 1).conn
+    K = k_hot
+    dark = np.full((K, N_TORS, 1), -1, np.int32)
+    hot = dark.copy()
+    hot[0, 0, 0], hot[0, 3, 0] = 3, 0
+    hot[1, 1, 0], hot[1, 6, 0] = 6, 1
+    old_s = Schedule(np.concatenate([base, dark]))
+    new_s = Schedule(np.concatenate([base, hot]))
+    return new_s, alg(old_s), alg(new_s)
+
+
+@pytest.mark.parametrize("name,alg", ALL_SCHEMES, ids=[n for n, _ in ALL_SCHEMES])
+def test_check_tables_mixed_all_schemes(name, alg):
+    """Acceptance: mixed-version soundness holds across the whole install
+    window — any subset of upgraded ToRs — for every routing scheme."""
+    new_s, old_r, new_r = _install_pair(alg)
+    assert toolkit.check_tables_mixed(new_s, old_r, new_r, max_hops=32,
+                                      n_random=3) == []
+
+
+def test_check_tables_mixed_catches_version_loop():
+    """A walk that ping-pongs across the version boundary must be flagged:
+    old tables at node 1 detour dst-0 packets to node 2, new tables at
+    node 2 send them straight back — each version is loop-free alone, the
+    blend is not."""
+    sched = round_robin(3, 1)        # T=2: t even i->i+1, t odd i->i+2
+    old_r = direct(sched)
+    new_r = direct(sched)
+    old_r = dataclasses.replace(
+        old_r, tf_next=old_r.tf_next.copy(), tf_dep=old_r.tf_dep.copy(),
+        inj_next=old_r.inj_next.copy(), inj_dep=old_r.inj_dep.copy())
+    new_r = dataclasses.replace(
+        new_r, tf_next=new_r.tf_next.copy(), tf_dep=new_r.tf_dep.copy())
+    up = np.array([False, False, True])
+    assert toolkit.check_tables(sched, new_r, old_routing=old_r,
+                                upgraded=up) == []   # identical: sound
+    for a in (0, 1):
+        # old node 1 -> 2 (live at even slices), dep keeps it on-circuit
+        for nxt_t, dep_t in ((old_r.inj_next, old_r.inj_dep),
+                             (old_r.tf_next, old_r.tf_dep)):
+            nxt_t[a, 1, 0, :] = -1
+            dep_t[a, 1, 0, :] = 0
+            nxt_t[a, 1, 0, 0] = 2
+            dep_t[a, 1, 0, 0] = a % 2
+        # new node 2 -> 1 (live at odd slices)
+        new_r.tf_next[a, 2, 0, :] = -1
+        new_r.tf_dep[a, 2, 0, :] = 0
+        new_r.tf_next[a, 2, 0, 0] = 1
+        new_r.tf_dep[a, 2, 0, 0] = (1 - a) % 2
+    bad = toolkit.check_tables(sched, new_r, old_routing=old_r,
+                               upgraded=up, t0s=(0,))
+    assert bad and all(b.startswith("mixed") for b in bad)
+
+
+def test_check_tables_mixed_validation():
+    new_s, old_r, new_r = _install_pair(direct)
+    with pytest.raises(ValueError, match="together"):
+        toolkit.check_tables(new_s, new_r, old_routing=old_r)
+    with pytest.raises(ValueError, match="cycle"):
+        short = direct(round_robin(N_TORS, 1))
+        toolkit.check_tables(new_s, new_r, old_routing=short,
+                             upgraded=np.zeros(N_TORS, bool))
+    with pytest.raises(ValueError, match="bool mask"):
+        toolkit.check_tables(new_s, new_r, old_routing=old_r,
+                             upgraded=np.zeros(3, bool))
+
+
+# ---------------------------------------------------------------------------
+# the OpenOpticsNet control API
+# ---------------------------------------------------------------------------
+
+
+def test_net_inject_control_and_heal():
+    net = OpenOpticsNet(dict(node="rack", node_num=N_TORS, uplink=1,
+                             slice_us=SLICE_NS / 1000.0,
+                             fabric=dict(slice_bytes=SLICE_BYTES)))
+    sched = round_robin(N_TORS, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(direct(sched))
+    wl = _pair_workload(2, 5, t_hi=10)
+    net.inject_control("skew", node=2, skew_ns=900.0)
+    res = net.run(wl, 40)
+    assert not (res.t_deliver >= 0).any()    # open-ended skew: all deferred
+    net.heal_control()                       # next window is in-band again
+    res2 = net.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert (res2.t_deliver >= 0).any()
+    with pytest.raises(ValueError, match="kind"):
+        net.inject_control("gremlin", node=0)
+
+
+def test_net_control_clock_offsets_windows():
+    """Control faults live on the net's absolute clock: a skew scheduled
+    inside the second run() window must not affect the first."""
+    net = OpenOpticsNet(dict(node="rack", node_num=N_TORS, uplink=1,
+                             slice_us=SLICE_NS / 1000.0,
+                             fabric=dict(slice_bytes=SLICE_BYTES)))
+    sched = round_robin(N_TORS, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(direct(sched))
+    net.inject_control("skew", node=2, skew_ns=900.0, t_start=40)
+    first = net.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert (first.t_deliver >= 0).any()       # window [0, 40): in-band
+    second = net.run(_pair_workload(2, 5, t_hi=10), 40)
+    assert not (second.t_deliver >= 0).any()  # window [40, 80): skewed

@@ -1,0 +1,105 @@
+"""Property-based sweeps for the control-plane robustness subsystem
+(hypothesis; module skipped when the library is absent — see conftest).
+
+Three families, mirroring the unit suite's load-bearing claims:
+
+* **mixed-version soundness** — for random consecutive-epoch install pairs
+  (shared base cycle, differing hot tails) and *every* routing scheme,
+  ``check_tables_mixed`` finds no violation in any activation order;
+* **install replay** — under random control traces the device's per-epoch
+  version decisions (``install_ver`` / ``install_lat`` /
+  ``install_retries``) equal the host replay built from
+  :func:`repro.core.controlplane.install_schedule`, for both protocols;
+* **graceful degradation floor** — 2PC+degrade delivery under a random
+  (healed) control trace is never below the pure-oblivious baseline: the
+  schedule-oblivious direct tables (safe mode itself) run for the whole
+  window under the same trace. Degrading *sometimes* must not lose to
+  being degraded *always*.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FabricConfig, ReconfigConfig, compile_control,
+                        direct, ecmp, hoho, ksp, opera, random_control_trace,
+                        reconfigure, round_robin, synthesize, toolkit, ucmp,
+                        vlb, wcmp)
+from repro.core.topology import Schedule
+from test_controlplane import _replay_versions
+
+N_TORS = 8
+SLICE_BYTES = 10_000
+E, N_EP = 12, 6
+S = E * N_EP
+
+ALGS = (direct, vlb, opera, ucmp, hoho, ecmp, wcmp, ksp)
+
+
+def _random_install_pair(seed):
+    """Two consecutive reconfigure epochs: same base cycle, independently
+    drawn bidirectional hot-circuit tails (the shape ``reconfigure``'s
+    hot_slices scheduler produces)."""
+    rng = np.random.default_rng(seed)
+    base = round_robin(N_TORS, 1).conn
+    K = int(rng.integers(1, 4))
+    tails = []
+    for _ in range(2):
+        hot = np.full((K, N_TORS, 1), -1, np.int32)
+        for s in range(K):
+            a, b = rng.choice(N_TORS, 2, replace=False)
+            hot[s, a, 0], hot[s, b, 0] = b, a
+        tails.append(hot)
+    return (Schedule(np.concatenate([base, tails[0]])),
+            Schedule(np.concatenate([base, tails[1]])))
+
+
+@settings(max_examples=16, deadline=None)
+@given(alg_i=st.integers(0, len(ALGS) - 1), seed=st.integers(0, 1 << 20))
+def test_mixed_version_soundness_random_installs(alg_i, seed):
+    old_s, new_s = _random_install_pair(seed)
+    alg = ALGS[alg_i]
+    bad = toolkit.check_tables_mixed(new_s, alg(old_s), alg(new_s),
+                                     max_hops=32, n_random=2, seed=seed)
+    assert bad == []
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1 << 20),
+       install=st.sampled_from(["hotswap", "2pc"]))
+def test_install_replay_matches_device(seed, install):
+    sched = round_robin(N_TORS, 1)
+    wl = synthesize("rpc", N_TORS, 24, slice_bytes=SLICE_BYTES, load=0.3,
+                    max_packets=600, seed=seed)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    rcfg = ReconfigConfig(epoch_slices=E, num_epochs=N_EP, scheme="hoho",
+                          k_hot=2, install=install, install_retries=2,
+                          install_backoff=2, install_timeout=8)
+    tr = random_control_trace(seed, N_TORS, S,
+                              kinds=("install_delay", "install_loss",
+                                     "stall"))
+    m = compile_control(tr, S, N_TORS, seed=seed)
+    res = reconfigure(sched, wl, cfg, rcfg, control=m)
+    ver, lat, ret = _replay_versions(m, E, N_EP, rcfg)
+    np.testing.assert_array_equal(res.install_ver, ver)
+    np.testing.assert_array_equal(res.install_lat, lat)
+    np.testing.assert_array_equal(res.install_retries, ret)
+    # structural: versions only ever move forward, and never past the epoch
+    assert (np.diff(res.install_ver, axis=0) >= 0).all()
+    assert (res.install_ver <= np.arange(N_EP)[:, None]).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1 << 20))
+def test_degrade_never_below_pure_oblivious(seed):
+    sched = round_robin(N_TORS, 1)
+    wl = synthesize("rpc", N_TORS, 24, slice_bytes=SLICE_BYTES, load=0.35,
+                    max_packets=800, seed=seed)
+    cfg = FabricConfig(slice_bytes=SLICE_BYTES)
+    tr = random_control_trace(seed, N_TORS, 3 * E).heal_all(3 * E)
+    m = compile_control(tr, S, N_TORS, seed=seed)
+    degr = reconfigure(sched, wl, cfg, ReconfigConfig(
+        epoch_slices=E, num_epochs=N_EP, scheme="hoho", k_hot=2,
+        install="2pc", install_timeout=8, degrade=True), control=m)
+    safe = reconfigure(sched, wl, cfg, ReconfigConfig(
+        epoch_slices=E, num_epochs=N_EP, scheme="direct", k_hot=0),
+        control=m)
+    assert degr.delivered_bytes.sum() >= safe.delivered_bytes.sum()

@@ -90,6 +90,23 @@ def test_simulate_bit_identical_large_population(over):
                           simulate_ref(tables, wl, cfg, 20))
 
 
+def test_simulate_bit_identical_mixed_rx_capacity_pressure():
+    """Push-back's rejected-prefix backlog cut under *mixed* admission
+    groups: a small switch buffer makes rx admission bind (rx-subject
+    buffered hops) in the same sort groups where a hybrid electrical share
+    and 2x load make the capacity prefix bind. The cut must stay
+    semantically invisible — only packets with no rescuable rx-subject
+    predecessor may be filtered — so the fabric stays bit-identical to the
+    unfiltered reference."""
+    wl = synthesize("rpc", N, 24, slice_bytes=3_000, load=2.0,
+                    max_packets=1200, seed=7)
+    tables = _tables()
+    cfg = FabricConfig(slice_bytes=3_000, elec_bytes=1_500, cc_detect=True,
+                       pushback=True, switch_buffer=9_000)
+    _assert_results_equal(simulate(tables, wl, cfg, SLICES),
+                          simulate_ref(tables, wl, cfg, SLICES))
+
+
 def test_simulate_deterministic():
     wl = _workload()
     tables = _tables()

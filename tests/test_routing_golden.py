@@ -243,17 +243,21 @@ def test_opera_golden(i):
 
 @pytest.mark.parametrize("i", range(len(_schedules())))
 def test_time_dp_all_jnp_matches_numpy(i):
-    """Finite DP costs agree exactly; unreachable cells carry each
-    implementation's own sentinel (int64 INF vs int32 JINF)."""
+    """The device DP carries the lexicographic metric as two int32
+    components (arrival, hops); fusing them with the numpy encoding's base
+    must reproduce the int64 reference exactly on finite cells, and
+    unreachable cells must carry the (JINF, 0) sentinel."""
     import jax.numpy as jnp
 
     sched = _schedules()[i]
+    B = _dp_B(sched, 4)
     cost_np, _ = _time_dp_all(sched, max_hop=4)
     cost_j = np.asarray(routing_jnp.time_dp_all(jnp.asarray(sched.conn), 4))
+    fused = cost_j[..., 0].astype(np.int64) * B + cost_j[..., 1]
     finite = cost_np < INF
-    np.testing.assert_array_equal(cost_np[finite],
-                                  cost_j[finite].astype(np.int64))
-    assert np.all(cost_j[~finite] == int(routing_jnp.JINF))
+    np.testing.assert_array_equal(cost_np[finite], fused[finite])
+    assert np.all(cost_j[~finite, 0] == int(routing_jnp.JINF))
+    assert np.all(cost_j[~finite, 1] == 0)
 
 
 @pytest.mark.parametrize("i", range(len(_schedules())))
@@ -293,14 +297,24 @@ def test_compile_impl_rejects_unknown():
         routing_jnp.compile_tables(jnp.asarray(sched.conn), "ecmp")
 
 
-def test_jnp_dp_range_guard():
-    """The int32 device DP refuses schedules whose metric range would
-    overflow (the numpy int64 path remains available)."""
+def test_jnp_dp_large_schedule_golden():
+    """Schedules whose *fused* int32 metric would overflow (T = 600 here —
+    the old static range guard rejected anything past ~500 round-robin
+    nodes) now compile on-device: the two-component lexicographic metric
+    stays golden vs the numpy int64 reference, tables included."""
     import jax.numpy as jnp
 
-    conn = jnp.zeros((600, 4, 1), jnp.int32)
-    with pytest.raises(ValueError, match="int32"):
-        routing_jnp.time_dp_all(conn, max_hop=4)
+    rng = np.random.default_rng(3)
+    sched = _random_sched(rng, 4, 600, 1)
+    B = _dp_B(sched, 4)
+    # past the old static guard's threshold: the fused int32 path refused it
+    assert 2 * sched.num_slices * B >= (1 << 29)
+    cost_np, _ = _time_dp_all(sched, max_hop=4)
+    cost_j = np.asarray(routing_jnp.time_dp_all(jnp.asarray(sched.conn), 4))
+    fused = cost_j[..., 0].astype(np.int64) * B + cost_j[..., 1]
+    finite = cost_np < INF
+    np.testing.assert_array_equal(cost_np[finite], fused[finite])
+    _assert_routing_equal(hoho(sched), hoho(sched, compile_impl="jnp"))
 
 
 # ---------------------------------------------------------------------------
