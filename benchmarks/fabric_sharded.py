@@ -1,0 +1,75 @@
+"""Sharded-fabric + vmapped-fleet benchmarks (ISSUE 7).
+
+``fabric_sim_sharded_{1,2,4,8}dev`` times the shard_map'd data plane over the
+forced host-platform CPU mesh (``run.py`` sets the device-count flag). On one
+physical CPU the 8 "devices" share cores, so these rows do NOT show a
+speedup — they track the *collective-exchange overhead* of the sharded
+formulation (the 1-dev row is the no-exchange reference), which is the cost
+that must stay flat for multi-host scaling to pay off.
+
+``scenario_vmap_sweep`` is the fleet row: a fig8-style seed sweep (many
+small scenarios — the hypothesis-suite regime) run as one vmapped program
+vs the per-scenario Python loop of jit calls it replaces
+(``scenario_loop_sweep``). The ISSUE 7 acceptance bar is >= 3x on the quick
+sweep; the derived field carries the measured ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import (FabricConfig, FabricTables, hoho, round_robin,
+                        simulate, simulate_fleet, simulate_sharded, synthesize,
+                        ucmp)
+
+N = 8
+
+
+def _best_of(fn, reps=3):
+    fn()                       # warm (compile + first dispatch)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        best = min(best, time.time() - t0)
+    return best
+
+
+def run(quick: bool = False):
+    rows = []
+    sched = round_robin(N, 1)
+
+    # -- sharded data plane: exchange overhead per shard count -------------
+    tables = FabricTables.build(sched, ucmp(sched))
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    S = 24 if quick else 48
+    mp = 420 if quick else 2048
+    wl = synthesize("rpc", N, 24, slice_bytes=4_000, load=0.9,
+                    max_packets=mp, seed=11)
+    rate = wl.num_packets * S
+    for d in (1, 2, 4, 8):
+        if d > jax.device_count():
+            continue
+        def call(d=d):
+            return simulate(tables, wl, cfg, S) if d == 1 else \
+                simulate_sharded(tables, wl, cfg, S, num_shards=d)
+        us = _best_of(call) * 1e6
+        rows.append((f"fabric_sim_sharded_{d}dev", us,
+                     f"{rate/us:.2f}Mpkt-slice/s"
+                     + ("" if d > 1 else " (no-exchange ref)")))
+
+    # -- vmapped scenario fleet vs the Python loop -------------------------
+    B = 64 if quick else 128
+    SW = 8
+    ftab = FabricTables.build(sched, hoho(sched))
+    fcfg = FabricConfig(slice_bytes=4_000, hops_per_slice=1, cc_detect=False)
+    wls = [synthesize("rpc", N, SW, slice_bytes=4_000, load=0.9,
+                      max_packets=64, seed=s) for s in range(B)]
+    t_loop = _best_of(lambda: [simulate(ftab, w, fcfg, SW) for w in wls])
+    t_vmap = _best_of(lambda: simulate_fleet(ftab, wls, fcfg, SW))
+    rows.append(("scenario_loop_sweep", t_loop * 1e6,
+                 f"{B}x jit calls (baseline)"))
+    rows.append(("scenario_vmap_sweep", t_vmap * 1e6,
+                 f"{t_loop/t_vmap:.1f}x vs loop, B={B}"))
+    return rows

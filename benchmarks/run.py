@@ -32,9 +32,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import traceback
+
+# the sharded-fabric rows (benchmarks/fabric_sharded.py) shard over forced
+# host-platform CPU devices; the flag must land before jax first initializes
+# (modules import jax lazily, inside _run_module). A caller-set count wins.
+_DEVFLAG = "--xla_force_host_platform_device_count"
+if _DEVFLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_DEVFLAG}=8").strip()
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -51,6 +60,7 @@ MODULES = [
     "table4_congestion",
     "min_slice",
     "kernels_bench",
+    "fabric_sharded",
     "roofline",
 ]
 

@@ -16,9 +16,11 @@ from .topology import (Circuit, Schedule, connect, round_robin, edmonds, bvn,
 from .routing import (CompiledRouting, direct, vlb, opera, ucmp, hoho, ecmp,
                       wcmp, ksp, neighbors, earliest_path, add_entry)
 from .timeflow import Entry, TimeFlowTable
-from .fabric import FabricConfig, FabricTables, Workload, SimResult, simulate
+from .fabric import (FabricConfig, FabricTables, Workload, SimResult,
+                     simulate, simulate_sharded, simulate_fleet)
 from .net import OpenOpticsNet, clos_routing
-from .reconfigure import ReconfigConfig, ReconfigResult, reconfigure
+from .reconfigure import (ReconfigConfig, ReconfigResult, reconfigure,
+                          reconfigure_fleet)
 from .failures import (FailureEvent, FailureTrace, FailureMasks,
                        compile_masks, random_trace, repair, surviving_conn,
                        backup_tables, fast_reroute, simulate_phased)
@@ -38,8 +40,9 @@ __all__ = [
     "wcmp", "ksp", "neighbors", "earliest_path", "add_entry",
     "Entry", "TimeFlowTable",
     "FabricConfig", "FabricTables", "Workload", "SimResult", "simulate",
+    "simulate_sharded", "simulate_fleet",
     "OpenOpticsNet", "clos_routing",
-    "ReconfigConfig", "ReconfigResult", "reconfigure",
+    "ReconfigConfig", "ReconfigResult", "reconfigure", "reconfigure_fleet",
     "FailureEvent", "FailureTrace", "FailureMasks", "compile_masks",
     "random_trace", "repair", "surviving_conn", "backup_tables",
     "fast_reroute", "simulate_phased",

@@ -95,7 +95,8 @@ from .topology import Schedule
 from ..kernels.admission import admission_admit
 from ..kernels.time_flow_lookup import time_flow_lookup
 
-__all__ = ["FabricConfig", "Workload", "FabricTables", "simulate", "SimResult"]
+__all__ = ["FabricConfig", "Workload", "FabricTables", "simulate",
+           "simulate_sharded", "simulate_fleet", "SimResult"]
 
 NOT_INJECTED = -1
 DELIVERED = -2
@@ -338,10 +339,31 @@ def _group_admit_small(key, size, want, cap_left, num_keys, C, impl="xla"):
     return admitted, used
 
 
-def _admit(key, size, want, cap_left, num_keys, C=ADMIT_C, impl="xla"):
+def _admit(key, size, want, cap_left, num_keys, C=ADMIT_C, impl="xla",
+           axis=None, num_shards=1):
     """Dispatch between the compact and full admission paths; ``impl``
-    (``FabricConfig.admit_impl``) selects the backend inside both."""
+    (``FabricConfig.admit_impl``) selects the backend inside both.
+
+    ``axis`` (a shard_map mesh axis name) switches to the cross-shard
+    formulation: packets are partitioned over the axis in contiguous
+    global-index blocks, so a local packet's *global* FIFO byte prefix in
+    its admission group is its local prefix plus the wanted bytes of all
+    lower-indexed shards — a per-key offset from one all_gather of
+    per-shard per-key byte totals (the static ``[num_shards, num_keys]``
+    exchange buffer; :func:`repro.distributed.collectives
+    .shard_group_offsets`). Shifting the capacities down by that offset
+    turns any local backend into the exact global admission — including
+    the Pallas kernel, which dispatches under shard_map unchanged."""
     P = key.shape[0]
+    if axis is not None:
+        from ..distributed.collectives import shard_group_offsets
+        local_bytes = jax.ops.segment_sum(
+            jnp.where(want, size, 0), jnp.where(want, key, num_keys),
+            num_segments=num_keys + 1)[:num_keys]
+        offs = shard_group_offsets(local_bytes, axis, num_shards)
+        admitted, used = _group_admit_impl(
+            key, size, want, cap_left - offs, num_keys, impl)
+        return admitted, jax.lax.psum(used, axis)
     if P <= C:
         return _group_admit_impl(key, size, want, cap_left, num_keys, impl)
     return jax.lax.cond(
@@ -429,12 +451,7 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
     module's per-slice step via :func:`_make_step` with tables swapped in
     from the scan carry.
     """
-    if cfg.lookup_impl not in ("jnp", "pallas", "pallas-interpret"):
-        raise ValueError(f"unknown lookup_impl {cfg.lookup_impl!r}: expected "
-                         "'jnp', 'pallas', or 'pallas-interpret'")
-    if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
-        raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
-                         "'xla', 'pallas', or 'pallas-interpret'")
+    _check_impls(cfg)
     T, N, U = tables.conn.shape
     dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
     j = dict(
@@ -484,7 +501,8 @@ def _init_state(j, num_flows: int):
     )
 
 
-def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
+def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
+               axis=None, num_shards=1, batched=False):
     """Build the per-slice ``step(state, t) -> (state, stats)`` function over
     the arrays in ``j`` (schedule + tables + workload).
 
@@ -493,13 +511,62 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     epoch carry, which is what lets it hot-swap routing mid-run without
     re-jitting. Everything derived here (per-slice capacities, the stacked
     injection/transit lookup tables) is recomputed from ``j`` per trace.
+
+    With ``axis`` (a shard_map mesh axis name; see :func:`simulate_sharded`)
+    the same step runs *sharded*: the per-packet arrays in ``j`` and the
+    per-packet state are this shard's contiguous global-index block, the
+    per-ToR aggregates (occupancy map, backlog views, block_until, max_seq)
+    stay replicated and are reconciled through
+    :mod:`repro.distributed.collectives` exchange primitives at every update
+    site (psum of scatter-add deltas, pmin of backlog cuts, pmax of
+    block_until / max_seq), and every admission routes through
+    :func:`_admit`'s cross-shard offset exchange. Data-dependent ``lax.cond``
+    skips are disabled (their predicates are shard-local, so shards could
+    diverge around the collectives); each skipped branch is a semantic
+    identity, so the sharded program stays bit-identical to the
+    single-device one — which the multi-device differential suite asserts.
     """
+    assert not ("tf_next_v" in j and axis is not None), \
+        "versioned installs come from reconfigure, which vmaps, not shards"
     T, N, U = j["conn"].shape
-    P = j["src"].shape[0]
-    pid = jnp.arange(P, dtype=jnp.int32)
+    P = j["src"].shape[0]            # the local block width under sharding
+    if axis is None:
+        shard = None
+        pid = jnp.arange(P, dtype=jnp.int32)
+        PG = P
+    else:
+        shard = jax.lax.axis_index(axis)
+        # global packet ids: shard d owns global indices [d*P, (d+1)*P)
+        pid = (shard * P + jnp.arange(P)).astype(jnp.int32)
+        PG = P * num_shards          # global (padded) packet count
     NKEY = N * (N + 1)
     T2 = 2 * T                       # calendar-queue ring: dep in (t, t + 2T)
     limit = jnp.minimum(cfg.slice_bytes, cfg.congestion_threshold)
+
+    # Replicated-state reconciliation points (identities when unsharded):
+    # every update of a replicated aggregate is exchanged before its next
+    # read so all shards keep bit-identical copies.
+    def gsum(x):
+        return jax.lax.psum(x, axis) if axis is not None else x
+
+    def gmin(x):
+        return jax.lax.pmin(x, axis) if axis is not None else x
+
+    def gmax(x):
+        return jax.lax.pmax(x, axis) if axis is not None else x
+
+    def upd_add(target, *updates):
+        """Apply masked scatter-adds to a replicated aggregate; sharded,
+        the local delta is accumulated separately and psum-reconciled so
+        every shard applies the same global update."""
+        if axis is None:
+            for idx, vals, mask in updates:
+                target = _scatter_add_masked(target, idx, vals, mask)
+            return target
+        d = jnp.zeros_like(target)
+        for idx, vals, mask in updates:
+            d = _scatter_add_masked(d, idx, vals, mask)
+        return target + jax.lax.psum(d, axis)
 
     # Control-plane masks (repro.core.controlplane): when present, each
     # ToR consults its tables at its *local* slice (t + phase_off) and a
@@ -512,8 +579,28 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     has_ctrl = "phase_off" in j
     has_vers = "tf_next_v" in j
     Tr = j["tf_next_v"].shape[1] if has_vers else j["tf_next"].shape[0]
-    # population tiers for the per-phase compact views (see module docstring)
-    TIERS = [c for c in (2048, ADMIT_C) if c < P]
+    # population tiers for the per-phase compact views (see module
+    # docstring). Sharded, the tier conds are disabled outright: their
+    # predicates are shard-local live counts, so shards could pick
+    # different branches around the exchange collectives. The local block
+    # is already P/num_shards wide, which is what the tiers were for.
+    # Batched (vmap over a scenario axis), every data-dependent cond is
+    # likewise disabled: a cond with a batched predicate lowers to running
+    # *both* branches behind a select, so the phase-skips that pay on a
+    # single scenario cost double under vmap — the unconditional program
+    # (every skipped branch is a semantic identity) is the faster *and*
+    # still bit-identical formulation.
+    uncond = axis is not None or batched
+    TIERS = [] if uncond else [c for c in (2048, ADMIT_C) if c < P]
+
+    def node_row(name, t):
+        """``j[name][t]`` as a full per-node row. Sharded, ``j[name]``
+        holds only this shard's owned ToR rows (``[S, ceil(N/D)]``, padded)
+        and the full row is gathered once per slice."""
+        if axis is None:
+            return j[name][t]
+        from ..distributed.collectives import gather_node_row
+        return gather_node_row(j[name][t], axis, N)
 
     caps_all = _build_caps_all(j["conn"], cfg, N)          # [T, NKEY]
 
@@ -526,7 +613,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     # the failure-free one (zero-failure bit-identity).
     has_fail = "link_cap" in j
 
-    def caps_at(t):
+    def caps_at(t, no_t):
         if not has_fail:
             return caps_all[t % T]
         # The masked capacities are recomputed per step rather than
@@ -536,15 +623,24 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
         # only runs epoch_slices of them. The U scatter-adds here are tiny
         # next to the per-slice packet phases; equivalence with
         # _build_caps_all on healthy masks is pinned by the zero-failure
-        # parity tests.
-        lc = j["link_cap"][t]                              # [N, N]
-        rows = jnp.arange(N, dtype=jnp.int32)
+        # parity tests. Sharded, each shard scatters only its owned
+        # link_cap rows (with global row keys) and the partial key maps are
+        # psum-exchanged; the electrical row is added once, post-exchange.
+        lc = j["link_cap"][t]                  # [N, N] ([rows_local, N] sharded)
+        NL = lc.shape[0]
+        if axis is None:
+            rows = jnp.arange(NL, dtype=jnp.int32)
+            own = jnp.ones((NL,), bool)
+        else:
+            rows = (shard * NL + jnp.arange(NL)).astype(jnp.int32)
+            own = rows < N                     # padded rows scatter nothing
+            rows = jnp.clip(rows, 0, N - 1)
         caps = jnp.zeros((NKEY,), jnp.int32)
         for k in range(U):
-            peer = j["conn"][t % T, :, k]
-            okp = peer >= 0
-            keyk = rows * (N + 1) + jnp.where(okp, peer, N)
-            lck = lc[rows, jnp.clip(peer, 0, N - 1)]
+            peer = j["conn"][t % T, rows, k]
+            okp = (peer >= 0) & own
+            keyk = rows * (N + 1) + jnp.where(peer >= 0, peer, N)
+            lck = lc[jnp.arange(NL), jnp.clip(peer, 0, N - 1)]
             # healthy (1.0) and dead (0.0) links stay exact integers; the
             # float product only prices genuinely degraded transceivers
             scaled = jnp.where(
@@ -552,8 +648,9 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 jnp.where(lck <= 0.0, 0,
                           (cfg.slice_bytes * lck).astype(jnp.int32)))
             caps = caps.at[keyk].add(jnp.where(okp, scaled, 0))
-        return caps.at[rows * (N + 1) + N].add(
-            jnp.where(j["node_ok"][t], jnp.int32(cfg.elec_bytes), 0))
+        caps = gsum(caps)
+        return caps.at[jnp.arange(N) * (N + 1) + N].add(
+            jnp.where(no_t, jnp.int32(cfg.elec_bytes), 0))
 
     # Stacked (injection, transit) tables for the fused first-phase lookup.
     # K is padded to the common max with invalid slots: the valid-slot count
@@ -577,6 +674,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     CONSTS = dict(size=j["size"], dst=j["dst"], src=j["src"], flow=j["flow"],
                   seq=j["seq"], is_eleph=j["is_eleph"])
     HOP_FIELDS = ("loc", "nxt", "dep", "relook", "nhops", "t_del")
+    if axis is not None:
+        # debug ownership trace for the sharding soundness checker: the
+        # shard index that capacity-admitted each packet (-1 = never)
+        HOP_FIELDS = HOP_FIELDS + ("adm_shard",)
     INJ_FIELDS = ("loc", "nxt", "dep", "relook")
 
     def mp_hash(t):
@@ -587,7 +688,12 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     def step(state, t):
         s = dict(state)
         h = mp_hash(t)
-        caps = caps_at(t)
+        # full per-node rows of the (possibly row-sharded) mask tensors,
+        # gathered once per slice
+        no_t = node_row("node_ok", t) if has_fail else None
+        po_t = node_row("phase_off", t) if has_ctrl else None
+        sm_t = node_row("skew_miss", t) if has_ctrl else None
+        caps = caps_at(t, no_t)
 
         def vbucket(v, dep_abs):
             return jnp.clip(v["loc"], 0, N - 1) * T2 + dep_abs % T2
@@ -632,9 +738,8 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
 
             def _defer(op):
                 s, v = dict(op[0]), dict(op[1])
-                s["occ"] = _scatter_add_masked(s["occ"], qb, -v["size"], full)
-                s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + 1),
-                                               v["size"], full)
+                s["occ"] = upd_add(s["occ"], (qb, -v["size"], full),
+                                   (vbucket(v, t + 1), v["size"], full))
                 v["relook"] = v["relook"] | full
                 v["dep"] = jnp.where(full, t + 1, v["dep"])
                 if cfg.pushback:
@@ -643,23 +748,34 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                         jnp.where(full, v["dst"], 0), dep_abs % T].max(upd)
                 return s, v
 
+            if uncond:
+                # the deferral's occupancy delta is psum-exchanged inside
+                # upd_add, so every shard must enter the branch; an
+                # all-false ``full`` makes it the identity
+                return _defer((s, v))
             return jax.lax.cond(jnp.any(full), _defer,
                                 lambda op: (dict(op[0]), dict(op[1])), (s, v))
 
         # -- 0. calendar queues activating this slice leave the occupancy map
         act = (s["loc"] >= 0) & (s["dep"] == t)
-        s["occ"] = jax.lax.cond(
-            jnp.any(act),
-            lambda occ: _scatter_add_masked(
-                occ, jnp.clip(s["loc"], 0, N - 1) * T2 + t % T2, -j["size"], act),
-            lambda occ: occ, s["occ"])
+        if uncond:
+            s["occ"] = upd_add(
+                s["occ"],
+                (jnp.clip(s["loc"], 0, N - 1) * T2 + t % T2, -j["size"], act))
+        else:
+            s["occ"] = jax.lax.cond(
+                jnp.any(act),
+                lambda occ: _scatter_add_masked(
+                    occ, jnp.clip(s["loc"], 0, N - 1) * T2 + t % T2,
+                    -j["size"], act),
+                lambda occ: occ, s["occ"])
 
         # -- 1+2. injection & re-lookup of deferred packets (fused lookup) ---
         ready = (j["t_inject"] <= t) & (s["loc"] == NOT_INJECTED)
         if has_fail:
             # a down ToR's hosts cannot inject; the packets simply retry
             # next slice (loc stays NOT_INJECTED)
-            ready &= j["node_ok"][t, j["src"]]
+            ready &= no_t[j["src"]]
         redo = s["relook"] & (s["loc"] >= 0) & (s["dep"] == t)
 
         def inj_redo_logic(s, v):
@@ -669,7 +785,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 sel = jnp.where(v["ready"], 0, 1)
                 node = jnp.where(v["ready"], v["src"], jnp.clip(v["loc"], 0, N - 1))
                 # a skewed ToR looks its tables up at its *local* slice
-                tl = t + j["phase_off"][t, node] if has_ctrl else t
+                tl = t + po_t[node] if has_ctrl else t
                 if has_vers:
                     # each ToR reads the table version its install state
                     # selects (old / new / safe) — mixed-version epochs
@@ -690,7 +806,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             if cfg.flow_pausing:
                 # elephants wait for the direct circuit their *source ToR*
                 # believes is coming (its local clock)
-                tsrc = t + j["phase_off"][t, v["src"]] if has_ctrl else t
+                tsrc = t + po_t[v["src"]] if has_ctrl else t
                 fd = j["first_direct"][tsrc % T, v["src"], v["dst"]]
                 use_direct = v["is_eleph"] & (fd >= 0)
                 nxt_i = jnp.where(use_direct, v["dst"], nxt_i)
@@ -704,16 +820,16 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             v["loc"] = jnp.where(inject, v["src"], v["loc"])
             v["nxt"] = jnp.where(inject, nxt_i, v["nxt"])
             v["dep"] = jnp.where(inject, t + off_i, v["dep"])
-            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_i),
-                                           v["size"], inject & (off_i > 0))
+            s["occ"] = upd_add(s["occ"], (vbucket(v, t + off_i), v["size"],
+                                          inject & (off_i > 0)))
             s, v = enqueue_checks(s, v, inject, jnp.where(inject, off_i, 0))
             n_blocked = jnp.sum(v["ready"] & blocked)
             # deferred packets re-enter the pipeline with a fresh action
             v["nxt"] = jnp.where(v["redo"], nxt_r, v["nxt"])
             v["dep"] = jnp.where(v["redo"], t + off_r, v["dep"])
             v["relook"] = v["relook"] & ~v["redo"]
-            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_r),
-                                           v["size"], v["redo"] & (off_r > 0))
+            s["occ"] = upd_add(s["occ"], (vbucket(v, t + off_r), v["size"],
+                                          v["redo"] & (off_r > 0)))
             return s, v, n_blocked
 
         inj_mask = ready | redo
@@ -732,13 +848,19 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 return write_view(s, v, INJ_FIELDS, idx), n_blocked
             return fn
 
-        inj_fn = inj_full
-        for c in TIERS[::-1]:
-            inj_fn = (lambda s, cc=c, inner=inj_fn:
-                      jax.lax.cond(inj_cnt <= cc, inj_compact(cc), inner, s))
-        s, n_blocked = jax.lax.cond(
-            inj_cnt > 0, inj_fn,
-            lambda s: (dict(s), jnp.zeros((), jnp.int32)), s)
+        if uncond:
+            # unconditional: the injection exchange collectives must run on
+            # every shard even when this shard has nothing to inject
+            s, n_blocked = inj_full(s)
+            n_blocked = gsum(n_blocked)
+        else:
+            inj_fn = inj_full
+            for c in TIERS[::-1]:
+                inj_fn = (lambda s, cc=c, inner=inj_fn:
+                          jax.lax.cond(inj_cnt <= cc, inj_compact(cc), inner, s))
+            s, n_blocked = jax.lax.cond(
+                inj_cnt > 0, inj_fn,
+                lambda s: (dict(s), jnp.zeros((), jnp.int32)), s)
 
         def on_switch_bytes(occ):
             """Per-node switch-resident bytes: occupancy columns within the
@@ -760,13 +882,13 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             if has_fail:
                 # the electrical fabric cannot terminate at a down ToR;
                 # dead optical circuits are already capacity-zero
-                want &= ~((v["nxt"] == N) & ~j["node_ok"][t, v["dst"]])
+                want &= ~((v["nxt"] == N) & ~no_t[v["dst"]])
             if has_ctrl:
                 # a ToR whose residual skew exceeds the guard band misses
                 # its optical transmit windows this slice (§7); the
                 # asynchronous electrical fabric is exempt. The packet
                 # misses its slice and re-enqueues via the §5.2 machinery.
-                want &= ~(j["skew_miss"][t, jnp.clip(v["loc"], 0, N - 1)] &
+                want &= ~(sm_t[jnp.clip(v["loc"], 0, N - 1)] &
                           (v["nxt"] < N))
             if cfg.pushback:
                 # push-back rejects at the *sender*: no transmission into a
@@ -776,7 +898,8 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 need_buf = want & (v["nxt"] < N) & (v["nxt"] != v["dst"])
                 room = jnp.maximum(cfg.switch_buffer - buf_now, 0)
                 adm_rx, _ = _admit(jnp.clip(v["nxt"], 0, N - 1), v["size"],
-                                   need_buf, room, N, impl=cfg.admit_impl)
+                                   need_buf, room, N, impl=cfg.admit_impl,
+                                   axis=axis, num_shards=num_shards)
                 # rx rejections are monotone within the slice: the rx cut is
                 # a FIFO prefix per receiver, a receiver's room only shrinks
                 # (buf_now only receives arrivals), and a candidate's rx
@@ -788,12 +911,18 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 rej_rx = need_buf & ~adm_rx
                 rx_backlog_min = rx_backlog_min.at[
                     jnp.where(rej_rx, jnp.clip(v["nxt"], 0, N - 1), 0)].min(
-                    jnp.where(rej_rx, v["gidx"], P))
+                    jnp.where(rej_rx, v["gidx"], PG))
                 want &= adm_rx | ~need_buf
             key = jnp.clip(v["loc"], 0, N - 1) * (N + 1) + jnp.clip(v["nxt"], 0, N)
             admitted, consumed = _admit(key, v["size"], want, caps - used,
-                                        NKEY, impl=cfg.admit_impl)
+                                        NKEY, impl=cfg.admit_impl,
+                                        axis=axis, num_shards=num_shards)
             used = used + consumed
+            if "adm_shard" in v:
+                # ownership trace: only the shard whose block holds the
+                # packet ever admits it (its peers hold no copy), which the
+                # toolkit sharding checker asserts
+                v["adm_shard"] = jnp.where(admitted, shard, v["adm_shard"])
             # Rejected packets form the slice's backlog: admission is a
             # cumulative-prefix cut per group and capacities only shrink, so a
             # packet positioned after a rejected one in its group can never be
@@ -805,7 +934,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 # and must not filter their healthy group-mates
                 rejected = want & ~admitted
                 backlog_min = backlog_min.at[jnp.where(rejected, key, 0)].min(
-                    jnp.where(rejected, v["gidx"], P))
+                    jnp.where(rejected, v["gidx"], PG))
             else:
                 # Under push-back the only bytes that can ever *leave* a
                 # candidate's capacity prefix belong to an earlier
@@ -823,11 +952,15 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 # prefixes, and cutting them would perturb the rx cut.
                 resc = need_buf & adm_rx & ~admitted
                 resc_min = resc_min.at[jnp.where(resc, key, 0)].min(
-                    jnp.where(resc, v["gidx"], P))
+                    jnp.where(resc, v["gidx"], PG))
+                # the markable test reads resc_min across *all* packets of
+                # the group, so the per-shard partial mins are exchanged
+                # before the read
+                resc_min = gmin(resc_min)
                 markable = want & ~admitted & ~need_buf & \
                     (v["gidx"] < resc_min[key])
                 backlog_min = backlog_min.at[jnp.where(markable, key, 0)].min(
-                    jnp.where(markable, v["gidx"], P))
+                    jnp.where(markable, v["gidx"], PG))
             is_elec = admitted & (v["nxt"] == N)
             moved = admitted & ~is_elec
             newloc = jnp.where(moved, v["nxt"], v["loc"])
@@ -864,13 +997,18 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                 s["max_seq"], s["reorder"] = jax.lax.cond(
                     jnp.sum(at_dst) <= SMALL_C, _re_small, _re_full,
                     (s["max_seq"], s["reorder"]))
+            # max_seq is replicated high-water state: exchange before the
+            # next hop's reads. reorder stays a per-shard partial count
+            # (each shard saw only its own deliveries against the *global*
+            # max_seq) and is summed once at the end of the run.
+            s["max_seq"] = gmax(s["max_seq"])
 
             v["loc"] = jnp.where(at_dst, DELIVERED, newloc)
             v["nhops"] = v["nhops"] + admitted.astype(jnp.int32)
             # transit lookup at the new node (its local slice, its version)
             in_transit = moved & ~at_dst
             node_t = jnp.clip(v["loc"], 0, N - 1)
-            tl = t + j["phase_off"][t, node_t] if has_ctrl else t
+            tl = t + po_t[node_t] if has_ctrl else t
             if has_vers:
                 vn = j["vsel"][t - j["vsel_t0"], node_t]
                 rn = j["tf_next_v"][vn, tl % Tr, node_t, v["dst"]]
@@ -884,8 +1022,8 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             v["dep"] = jnp.where(in_transit, t + off_t, v["dep"])
             # buffer-overflow drops on arrival at a new switch; a rejection
             # also pushes the sender back (paper §5.2)
-            buf_now = _scatter_add_masked(buf_now, jnp.clip(v["loc"], 0, N - 1),
-                                          v["size"], in_transit)
+            buf_now = upd_add(buf_now, (jnp.clip(v["loc"], 0, N - 1),
+                                        v["size"], in_transit))
             overflow = in_transit & \
                 (buf_now[jnp.clip(v["loc"], 0, N - 1)] > cfg.switch_buffer)
             if cfg.pushback:
@@ -894,14 +1032,18 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                     jnp.where(overflow, v["dst"], 0), v["dep"] % T].max(upd)
             v["loc"] = jnp.where(overflow, DROPPED, v["loc"])
             arrived = in_transit & ~overflow
-            s["occ"] = _scatter_add_masked(s["occ"], vbucket(v, t + off_t),
-                                           v["size"], arrived & (off_t > 0))
+            s["occ"] = upd_add(s["occ"], (vbucket(v, t + off_t), v["size"],
+                                          arrived & (off_t > 0)))
             s, v = enqueue_checks(s, v, arrived, jnp.where(in_transit, off_t, 0))
+            # the backlog cuts are read by every shard at the next hop's
+            # want0 filter: exchange the per-shard partial minima
+            backlog_min = gmin(backlog_min)
+            rx_backlog_min = gmin(rx_backlog_min)
             return s, v, used, buf_now, backlog_min, rx_backlog_min, resc_min
 
-        backlog_min = jnp.full((NKEY,), P, jnp.int32)
-        rx_backlog_min = jnp.full((N,), P, jnp.int32)
-        resc_min = jnp.full((NKEY,), P, jnp.int32)
+        backlog_min = jnp.full((NKEY,), PG, jnp.int32)
+        rx_backlog_min = jnp.full((N,), PG, jnp.int32)
+        resc_min = jnp.full((NKEY,), PG, jnp.int32)
         for _hop in range(cfg.hops_per_slice):
             want0 = (s["loc"] >= 0) & (s["dep"] == t) & (s["nxt"] >= 0) & \
                     (s["nhops"] < cfg.max_hops)
@@ -952,14 +1094,23 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
                             backlog_min, rx_backlog_min, resc_min)
                 return fn
 
-            hop_fn = hop_full
-            for c in TIERS[::-1]:
-                hop_fn = (lambda carry, cc=c, inner=hop_fn:
-                          jax.lax.cond(cnt0 <= cc, hop_compact(cc), inner, carry))
-            s, used, buf_now, backlog_min, rx_backlog_min, resc_min = \
-                jax.lax.cond(
-                    cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
-                    (s, used, buf_now, backlog_min, rx_backlog_min, resc_min))
+            if uncond:
+                # every shard runs every hop: the admission exchange and
+                # aggregate reconciliation are collective
+                s, used, buf_now, backlog_min, rx_backlog_min, resc_min = \
+                    hop_full((s, used, buf_now, backlog_min, rx_backlog_min,
+                              resc_min))
+            else:
+                hop_fn = hop_full
+                for c in TIERS[::-1]:
+                    hop_fn = (lambda carry, cc=c, inner=hop_fn:
+                              jax.lax.cond(cnt0 <= cc, hop_compact(cc), inner,
+                                           carry))
+                s, used, buf_now, backlog_min, rx_backlog_min, resc_min = \
+                    jax.lax.cond(
+                        cnt0 == 0, lambda c: (dict(c[0]),) + c[1:], hop_fn,
+                        (s, used, buf_now, backlog_min, rx_backlog_min,
+                         resc_min))
 
         # -- 4. handle packets that missed their slice ----------------------
         missed = (s["loc"] >= 0) & (s["dep"] == t)
@@ -970,16 +1121,25 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
             bump = t + 1 if cfg.cc_detect else t + T  # paused a cycle (§5.2)
             if cfg.cc_detect:
                 s["relook"] = s["relook"] | missed
-            s["occ"] = _scatter_add_masked(
-                s["occ"], jnp.clip(s["loc"], 0, N - 1) * T2 + bump % T2,
-                j["size"], missed)
+            s["occ"] = upd_add(
+                s["occ"], (jnp.clip(s["loc"], 0, N - 1) * T2 + bump % T2,
+                           j["size"], missed))
             s["dep"] = jnp.where(missed, bump, s["dep"])
             if cfg.pushback:
                 upd = jnp.where(missed, t + T, 0)
                 s["block_until"] = s["block_until"].at[j["dst"], t % T].max(upd)
             return s
 
-        s = jax.lax.cond(miss_cnt > 0, missed_body, lambda s: dict(s), s)
+        if uncond:
+            s = missed_body(s)       # occ delta is psum-exchanged inside
+            miss_cnt = gsum(miss_cnt)
+        else:
+            s = jax.lax.cond(miss_cnt > 0, missed_body, lambda s: dict(s), s)
+        if axis is not None and cfg.pushback:
+            # block_until collected per-shard partial maxima all step
+            # (defer, overflow, missed sites); it is only read at the next
+            # slice's injection, so one exchange here keeps it replicated
+            s["block_until"] = gmax(s["block_until"])
 
         # -- 5. per-slice stats (column sums of the occupancy map) ----------
         on_sw = on_switch_bytes(s["occ"])
@@ -988,8 +1148,9 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
         else:
             off_sw = jnp.zeros_like(on_sw)
         stats = dict(
-            delivered_bytes=jnp.sum(jnp.where(s["t_del"] == t, j["size"], 0)),
-            dropped=jnp.sum(s["loc"] == DROPPED),
+            delivered_bytes=gsum(
+                jnp.sum(jnp.where(s["t_del"] == t, j["size"], 0))),
+            dropped=gsum(jnp.sum(s["loc"] == DROPPED)),
             buf_bytes=on_sw, offl_bytes=off_sw,
             blocked_inj=n_blocked, slice_miss=miss_cnt,
         )
@@ -998,12 +1159,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int):
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
-def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
-                  num_flows: int):
-    step = _make_step(j, cfg, per_packet_mp, num_flows)
-    final, ys = jax.lax.scan(step, _init_state(j, num_flows),
-                             jnp.arange(num_slices, dtype=jnp.int32))
+def _sim_out(final, ys):
+    """Assemble the result dict from the scan's final state + stacked
+    per-slice stats (shared by the single-device, sharded, and vmapped
+    entry points)."""
     return dict(
         t_deliver=final["t_del"], loc_final=final["loc"], nhops=final["nhops"],
         delivered_bytes=ys["delivered_bytes"], dropped=ys["dropped"],
@@ -1011,3 +1170,259 @@ def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
         blocked_inj=ys["blocked_inj"], slice_miss=ys["slice_miss"],
         reorder_cnt=final["reorder"],
     )
+
+
+def _sim_body(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
+              num_flows: int, batched: bool = False):
+    step = _make_step(j, cfg, per_packet_mp, num_flows, batched=batched)
+    final, ys = jax.lax.scan(step, _init_state(j, num_flows),
+                             jnp.arange(num_slices, dtype=jnp.int32))
+    return _sim_out(final, ys)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
+                  num_flows: int):
+    return _sim_body(j, cfg, num_slices, per_packet_mp, num_flows)
+
+
+# ---------------------------------------------------------------------------
+# sharded + vmapped entry points (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+# j keys partitioned over the "tor" mesh axis: per-packet arrays by
+# contiguous global-index block, per-slice node tensors by owned ToR rows.
+# Everything else (schedule, tables, replicated aggregates) is replicated.
+_PACKET_KEYS = ("src", "dst", "size", "t_inject", "flow", "seq", "is_eleph")
+_NODE_ROW_KEYS = ("link_cap", "node_ok", "phase_off", "skew_miss")
+# per-packet outputs come back as per-shard blocks, concatenated in shard
+# order == global index order
+_PACKET_OUT = ("t_deliver", "loc_final", "nhops", "adm_shard")
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
+def _simulate_sharded_jit(j, cfg: FabricConfig, num_slices: int,
+                          per_packet_mp: bool, num_flows: int,
+                          num_shards: int, mesh):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    def body(jl):
+        step = _make_step(jl, cfg, per_packet_mp, num_flows,
+                          axis="tor", num_shards=num_shards)
+        st0 = _init_state(jl, num_flows)
+        st0["adm_shard"] = jnp.full_like(st0["loc"], -1)
+        final, ys = jax.lax.scan(step, st0,
+                                 jnp.arange(num_slices, dtype=jnp.int32))
+        out = _sim_out(final, ys)
+        # reorder was carried as a per-shard partial count (see _make_step)
+        out["reorder_cnt"] = jax.lax.psum(out["reorder_cnt"], "tor")
+        out["adm_shard"] = final["adm_shard"]
+        return out
+
+    def in_spec(k, a):
+        if k in _PACKET_KEYS:
+            return PS("tor")
+        if k in _NODE_ROW_KEYS:
+            return PS(*([None, "tor"] + [None] * (a.ndim - 2)))
+        return PS(*([None] * a.ndim))
+
+    in_specs = {k: in_spec(k, a) for k, a in j.items()}
+    out_specs = dict(
+        t_deliver=PS("tor"), loc_final=PS("tor"), nhops=PS("tor"),
+        adm_shard=PS("tor"), delivered_bytes=PS(), dropped=PS(),
+        buf_bytes=PS(), offl_bytes=PS(), blocked_inj=PS(), slice_miss=PS(),
+        reorder_cnt=PS(),
+    )
+    return shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                     out_specs=out_specs, check_rep=False)(j)
+
+
+def _check_impls(cfg: FabricConfig):
+    if cfg.lookup_impl not in ("jnp", "pallas", "pallas-interpret"):
+        raise ValueError(f"unknown lookup_impl {cfg.lookup_impl!r}: expected "
+                         "'jnp', 'pallas', or 'pallas-interpret'")
+    if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
+        raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
+                         "'xla', 'pallas', or 'pallas-interpret'")
+
+
+def simulate_sharded(tables: FabricTables, wl: Workload, cfg: FabricConfig,
+                     num_slices: int, num_shards: int | None = None,
+                     failures=None, control=None, with_debug: bool = False):
+    """Run :func:`simulate` sharded over a 1-D device mesh — bit-identical
+    to the single-device path (asserted by the multi-device differential
+    suite, ``tests/test_fabric_sharded.py``).
+
+    The packet vector is partitioned in contiguous global-index blocks
+    (padded with never-injecting packets when the population does not
+    divide), the dense failure/control mask tensors are partitioned by
+    owned ToR rows (each device holds only ``ceil(N / D)`` rows of
+    ``link_cap[S, N, N]``), and the per-ToR aggregates stay replicated with
+    every update exchanged through
+    :mod:`repro.distributed.collectives`. Admission/lookup run local to the
+    owning shard; cross-shard arrivals are exchanged per slice as static-
+    shape per-key aggregates (see :func:`_admit`).
+
+    Args:
+        num_shards: devices to shard over (default: all visible). Any
+            count 1..len(devices) works, including counts that do not
+            divide the ToR or packet counts.
+        with_debug: also return a debug dict (``adm_shard`` — the shard
+            that admitted each packet, ``owner`` — the shard owning each
+            packet's block, ``num_shards``, ``packet_block``) for the
+            :func:`repro.core.toolkit.check_sharding` soundness checker.
+    """
+    _check_impls(cfg)
+    from ..distributed import sharding as dshard
+    mesh, D = dshard.fabric_mesh(num_shards)
+    T, N, U = tables.conn.shape
+    P = wl.num_packets
+    Pl = dshard.block_len(P, D)
+    pp = lambda a, fill, dt: jnp.asarray(
+        dshard.pad_packet_axis(np.asarray(a, dt), D, fill))
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    j = dict(
+        conn=dev(tables.conn), tf_next=dev(tables.tf_next),
+        tf_dep=dev(tables.tf_dep), inj_next=dev(tables.inj_next),
+        inj_dep=dev(tables.inj_dep), first_direct=dev(tables.first_direct),
+        src=pp(wl.src, 0, np.int32), dst=pp(wl.dst, 0, np.int32),
+        size=pp(wl.size, 0, np.int32),
+        # pad packets "inject" after the run ends: they never act
+        t_inject=pp(wl.t_inject, num_slices, np.int32),
+        flow=pp(wl.flow, 0, np.int32), seq=pp(wl.seq, 0, np.int32),
+        is_eleph=pp(wl.is_eleph, False, bool),
+    )
+    if failures is not None:
+        failures.validate(num_slices, N)
+        j["link_cap"] = dev(dshard.pad_node_rows(
+            np.asarray(failures.link_cap, np.float32), D, 1.0), jnp.float32)
+        j["node_ok"] = dev(dshard.pad_node_rows(
+            np.asarray(failures.node_ok, bool), D, True), jnp.bool_)
+    if control is not None:
+        if cfg.lookup_impl != "jnp":
+            raise ValueError(
+                "control-plane masks need lookup_impl='jnp': per-ToR local "
+                f"slices make lookups per-packet in time (got "
+                f"{cfg.lookup_impl!r})")
+        control.validate(num_slices, N)
+        j["phase_off"] = dev(dshard.pad_node_rows(
+            np.asarray(control.phase_off, np.int32), D, 0))
+        j["skew_miss"] = dev(dshard.pad_node_rows(
+            np.asarray(control.skew_miss, bool), D, False), jnp.bool_)
+    num_flows = int(max(wl.flow.max() + 1, 1)) if P else 1
+    out = _simulate_sharded_jit(j, cfg, num_slices,
+                                tables.multipath == "packet", num_flows,
+                                D, mesh)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    adm_shard = out.pop("adm_shard")[:P]
+    for k in _PACKET_OUT:
+        if k in out:
+            out[k] = out[k][:P]      # drop the block padding
+    res = SimResult(**out)
+    if with_debug:
+        return res, dict(adm_shard=adm_shard,
+                         owner=dshard.shard_owner(np.arange(P), P, D),
+                         num_shards=D, packet_block=Pl)
+    return res
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _simulate_fleet_jit(jb, cfg: FabricConfig, num_slices: int,
+                        per_packet_mp: bool, num_flows: int):
+    return jax.vmap(
+        lambda jj: _sim_body(jj, cfg, num_slices, per_packet_mp, num_flows,
+                             batched=True)
+    )(jb)
+
+
+def simulate_fleet(tables, wls, cfg: FabricConfig, num_slices: int,
+                   failures=None, control=None) -> list[SimResult]:
+    """Run a whole scenario sweep as **one** batched XLA program:
+    :func:`simulate` vmapped over a scenario axis — bit-identical to the
+    per-scenario Python loop, without per-scenario dispatch overhead. The
+    body is built with the data-dependent phase-skip conds disabled
+    (``batched=True``): under vmap a cond runs both branches behind a
+    select, so the unconditional program (every skipped branch is a
+    semantic identity) is both faster and exactly equal.
+
+    Args:
+        tables: one :class:`FabricTables` shared by every scenario, or a
+            list (one per scenario) whose tables all share shapes and
+            multipath mode — e.g. the same scheme compiled over different
+            schedules, or schemes with shared table shapes.
+        wls: list of :class:`Workload`, all with the same packet count
+            (seed sweeps naturally satisfy this; ``num_flows`` is the max
+            across scenarios — extra rows of a scenario's ``max_seq`` are
+            simply never touched).
+        failures / control: ``None``, or a list of per-scenario masks
+            (``None`` entries are not allowed — presence is a static
+            branch, so it must agree across the batch; pass
+            ``FailureMasks.healthy(...)`` / ``ControlMasks.perfect(...)``
+            to mix faulty and clean scenarios).
+
+    Returns one :class:`SimResult` per scenario, in order.
+    """
+    _check_impls(cfg)
+    B = len(wls)
+    if B == 0:
+        return []
+    tabs = list(tables) if isinstance(tables, (list, tuple)) else [tables] * B
+    if len(tabs) != B:
+        raise ValueError(f"{len(tabs)} tables for {B} workloads")
+    if any(t.multipath != tabs[0].multipath for t in tabs):
+        raise ValueError("fleet tables must share a multipath mode (it is a "
+                         "static branch)")
+    shapes = {w.num_packets for w in wls}
+    if len(shapes) != 1:
+        raise ValueError(f"fleet workloads must share a packet count, got "
+                         f"{sorted(shapes)}")
+    T, N, U = tabs[0].conn.shape
+    stk = lambda arrs, dt: jnp.asarray(np.stack([np.asarray(a) for a in arrs]),
+                                       dt)
+    jb = dict(
+        conn=stk([t.conn for t in tabs], jnp.int32),
+        tf_next=stk([t.tf_next for t in tabs], jnp.int32),
+        tf_dep=stk([t.tf_dep for t in tabs], jnp.int32),
+        inj_next=stk([t.inj_next for t in tabs], jnp.int32),
+        inj_dep=stk([t.inj_dep for t in tabs], jnp.int32),
+        first_direct=stk([t.first_direct for t in tabs], jnp.int32),
+        src=stk([w.src for w in wls], jnp.int32),
+        dst=stk([w.dst for w in wls], jnp.int32),
+        size=stk([w.size for w in wls], jnp.int32),
+        t_inject=stk([w.t_inject for w in wls], jnp.int32),
+        flow=stk([w.flow for w in wls], jnp.int32),
+        seq=stk([w.seq for w in wls], jnp.int32),
+        is_eleph=stk([w.is_eleph for w in wls], jnp.bool_),
+    )
+    if failures is not None:
+        if len(failures) != B or any(f is None for f in failures):
+            raise ValueError(
+                "failures must be one mask set per scenario (mask presence "
+                "is a static branch; use FailureMasks.healthy for clean "
+                "scenarios)")
+        for f in failures:
+            f.validate(num_slices, N)
+        jb["link_cap"] = stk([f.link_cap for f in failures], jnp.float32)
+        jb["node_ok"] = stk([f.node_ok for f in failures], jnp.bool_)
+    if control is not None:
+        if cfg.lookup_impl != "jnp":
+            raise ValueError(
+                "control-plane masks need lookup_impl='jnp': per-ToR local "
+                f"slices make lookups per-packet in time (got "
+                f"{cfg.lookup_impl!r})")
+        if len(control) != B or any(c is None for c in control):
+            raise ValueError(
+                "control must be one mask set per scenario (mask presence "
+                "is a static branch; use ControlMasks.perfect for clean "
+                "scenarios)")
+        for c in control:
+            c.validate(num_slices, N)
+        jb["phase_off"] = stk([c.phase_off for c in control], jnp.int32)
+        jb["skew_miss"] = stk([c.skew_miss for c in control], jnp.bool_)
+    num_flows = max(max(int(w.flow.max()) + 1 if w.num_packets else 1, 1)
+                    for w in wls)
+    out = _simulate_fleet_jit(jb, cfg, num_slices,
+                              tabs[0].multipath == "packet", num_flows)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    return [SimResult(**{k: v[i] for k, v in out.items()}) for i in range(B)]

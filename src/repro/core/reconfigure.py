@@ -77,7 +77,8 @@ from .fabric import DROPPED, FabricConfig, Workload, _init_state, _make_step
 from .failures import surviving_conn
 from .topology import Schedule
 
-__all__ = ["ReconfigConfig", "ReconfigResult", "reconfigure"]
+__all__ = ["ReconfigConfig", "ReconfigResult", "reconfigure",
+           "reconfigure_fleet"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,6 +217,13 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     lands at the epoch's first slice and the results are bit-identical to
     the atomic-swap program (pinned by ``tests/test_controlplane.py``).
     """
+    _validate(cfg, rcfg)
+    j, T0, num_flows = _build_j(sched, wl, cfg, rcfg, failures, control)
+    out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
+    return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
+
+
+def _validate(cfg: FabricConfig, rcfg: ReconfigConfig) -> None:
     if rcfg.scheme not in routing_jnp.SCHEMES:
         raise ValueError(f"unknown TO scheme {rcfg.scheme!r}: expected one "
                          f"of {routing_jnp.SCHEMES}")
@@ -243,6 +251,12 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
             "degrade needs install='2pc' (a timeout to detect) and "
             "scheduler='hot_slices' (safe tables are the direct tables "
             "over the base cycle; edmonds/bvn have no base cycle)")
+
+
+def _build_j(sched: Schedule, wl: Workload, cfg: FabricConfig,
+             rcfg: ReconfigConfig, failures, control):
+    """The device-array dict one reconfiguration scenario runs on (shared
+    by :func:`reconfigure` and the vmapped :func:`reconfigure_fleet`)."""
     T0, N, U = sched.conn.shape
     # epoch-0 placeholder schedule (dark where demand-derived): fixes the
     # static epoch-cycle shape for the scan
@@ -277,13 +291,68 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
         j["ctrl_delay"] = dev(control.ctrl_delay)
         j["ctrl_ok"] = dev(control.ctrl_ok, jnp.bool_)
     num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
-    out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
-    return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
+    return j, T0, num_flows
+
+
+def reconfigure_fleet(sched: Schedule, wls, cfg: FabricConfig,
+                      rcfg: ReconfigConfig, failures=None,
+                      control=None) -> list[ReconfigResult]:
+    """Run a sweep of reconfiguration scenarios as **one** batched XLA
+    program: :func:`reconfigure` vmapped over a scenario axis (traffic
+    seeds x failure traces x control traces), bit-identical per scenario
+    to the Python loop of :func:`reconfigure` calls — including every
+    ``ReconfigResult`` history field (``epoch_conn``, ``install_ver``,
+    ``install_lat``, ``degraded``, ...).
+
+    ``wls`` is a list of :class:`Workload` sharing a packet count;
+    ``failures`` / ``control`` are ``None`` or per-scenario mask lists
+    (presence is a static branch, so it must agree across the batch — mix
+    in ``FailureMasks.healthy`` / ``ControlMasks.perfect`` for clean
+    scenarios). The base ``sched`` and both configs are shared."""
+    _validate(cfg, rcfg)
+    B = len(wls)
+    if B == 0:
+        return []
+    if {w.num_packets for w in wls} != {wls[0].num_packets}:
+        raise ValueError("fleet workloads must share a packet count")
+    fails = failures if failures is not None else [None] * B
+    ctrls = control if control is not None else [None] * B
+    if len(fails) != B or len(ctrls) != B:
+        raise ValueError(f"{len(fails)} failure / {len(ctrls)} control mask "
+                         f"sets for {B} workloads")
+    for name, masks in (("failures", fails), ("control", ctrls)):
+        if any((m is None) != (masks[0] is None) for m in masks):
+            raise ValueError(
+                f"{name} presence must agree across the fleet (it is a "
+                "static branch; use healthy/perfect masks for clean "
+                "scenarios)")
+    js = []
+    for w, f, c in zip(wls, fails, ctrls):
+        j, T0, nf = _build_j(sched, w, cfg, rcfg, f, c)
+        js.append((j, T0, nf))
+    num_flows = max(nf for _, _, nf in js)
+    jb = {k: jnp.stack([j[k] for j, _, _ in js]) for k in js[0][0]}
+    out = _reconfigure_fleet_jit(jb, cfg, rcfg, js[0][1], num_flows)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    return [ReconfigResult(**{k: v[i] for k, v in out.items()})
+            for i in range(B)]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def _reconfigure_fleet_jit(jb, cfg: FabricConfig, rcfg: ReconfigConfig,
+                           T0: int, num_flows: int):
+    return jax.vmap(
+        lambda j: _reconfig_body(j, cfg, rcfg, T0, num_flows))(jb)
 
 
 @functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
 def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
                      num_flows: int):
+    return _reconfig_body(j, cfg, rcfg, T0, num_flows)
+
+
+def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
+                   num_flows: int):
     Tf, N, U = j["conn"].shape               # Tf = T0 + k_hot
     E = rcfg.epoch_slices
     K = rcfg.k_hot

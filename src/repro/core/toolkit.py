@@ -16,7 +16,7 @@ from .routing import CompiledRouting
 from .topology import Schedule
 
 __all__ = ["trace_packet", "format_schedule", "check_tables",
-           "check_tables_mixed"]
+           "check_tables_mixed", "check_sharding"]
 
 
 def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
@@ -275,6 +275,95 @@ def check_tables_mixed(sched: Schedule, old_routing: CompiledRouting,
             bad.append(f"[upgraded={tag}] {msg}")
             if len(bad) > 64:
                 return bad
+    return bad
+
+
+def check_sharding(res, debug: dict, wl, num_slices: int) -> list[str]:
+    """Sharding soundness checker for :func:`repro.core.fabric.simulate_sharded`
+    (``check_tables``-style: returns human-readable violation messages,
+    empty = sound), used by the hypothesis sweep in
+    ``tests/test_sharded_prop.py``.
+
+    Args:
+        res: the :class:`~repro.core.fabric.SimResult`.
+        debug: the debug dict from ``simulate_sharded(..., with_debug=True)``
+            (``adm_shard`` — shard that admitted each packet in the hop
+            phase, -1 = never hop-admitted; ``owner`` — shard owning each
+            packet's contiguous block; ``num_shards``).
+        wl: the :class:`~repro.core.fabric.Workload` that was simulated.
+        num_slices: slices simulated.
+
+    Ownership invariants — the partition is real, not cosmetic:
+
+    * every recorded admitting shard is a valid shard id;
+    * **no packet is admitted by a non-owning shard** (``adm_shard`` is
+      either -1 or exactly ``owner``);
+    * a packet that took hops was admitted by its owner, and a packet that
+      was never injected was never admitted.
+
+    Conservation invariants — nothing is lost to the cross-shard exchange
+    (the per-key aggregate buffers are static-shape by construction, so
+    there is no overflow class to account: every packet must land in
+    exactly one of delivered / dropped / queued / not-injected):
+
+    * every ``loc_final`` is a known terminal state or an in-fabric
+      location in ``[0, N]`` (``N`` = electrical);
+    * delivered ⟺ ``t_deliver`` within the run; undelivered ⟺ -1;
+    * ``sum(delivered_bytes)`` equals the byte sum of delivered packets;
+    * the final cumulative drop count equals the dropped-packet count.
+    """
+    from .fabric import DELIVERED, DROPPED, NOT_INJECTED
+    bad: list[str] = []
+    P = int(np.asarray(wl.src).size)
+    D = int(debug["num_shards"])
+    adm = np.asarray(debug["adm_shard"])
+    owner = np.asarray(debug["owner"])
+    loc = np.asarray(res.loc_final)
+    t_del = np.asarray(res.t_deliver)
+    nhops = np.asarray(res.nhops)
+    size = np.asarray(wl.size)
+    if adm.shape != (P,) or owner.shape != (P,):
+        return [f"debug arrays shaped {adm.shape}/{owner.shape}, "
+                f"expected ({P},)"]
+
+    # --- ownership -------------------------------------------------------
+    for p in np.nonzero((adm < -1) | (adm >= D))[0][:8]:
+        bad.append(f"packet {p}: adm_shard={adm[p]} outside [-1, {D})")
+    foreign = (adm >= 0) & (adm != owner)
+    for p in np.nonzero(foreign)[0][:8]:
+        bad.append(f"packet {p}: admitted by shard {adm[p]} but owned by "
+                   f"shard {owner[p]}")
+    for p in np.nonzero((nhops > 0) & (adm < 0))[0][:8]:
+        bad.append(f"packet {p}: took {nhops[p]} hops but no shard "
+                   "recorded admitting it")
+    for p in np.nonzero((loc == NOT_INJECTED) & (adm >= 0))[0][:8]:
+        bad.append(f"packet {p}: never injected yet admitted by shard "
+                   f"{adm[p]}")
+
+    # --- conservation ----------------------------------------------------
+    # in-fabric locations are validated loosely (any non-negative id is a
+    # node or the electrical port); the real classes are the sentinels
+    known = np.isin(loc, (NOT_INJECTED, DELIVERED, DROPPED)) | (loc >= 0)
+    for p in np.nonzero(~known)[0][:8]:
+        bad.append(f"packet {p}: loc_final={loc[p]} is no known terminal "
+                   "state or fabric location")
+    delivered = loc == DELIVERED
+    in_run = (t_del >= 0) & (t_del < num_slices)
+    for p in np.nonzero(delivered & ~in_run)[0][:8]:
+        bad.append(f"packet {p}: delivered but t_deliver={t_del[p]} "
+                   f"outside [0, {num_slices})")
+    for p in np.nonzero(~delivered & (t_del != -1))[0][:8]:
+        bad.append(f"packet {p}: loc_final={loc[p]} (undelivered) but "
+                   f"t_deliver={t_del[p]} != -1")
+    got = int(np.asarray(res.delivered_bytes).sum())
+    want = int(size[delivered].sum())
+    if got != want:
+        bad.append(f"delivered_bytes sums to {got}, delivered packets "
+                   f"carry {want} bytes")
+    n_drop = int(np.asarray(res.dropped)[-1]) if num_slices else 0
+    if n_drop != int(np.sum(loc == DROPPED)):
+        bad.append(f"final drop counter {n_drop} != "
+                   f"{int(np.sum(loc == DROPPED))} packets at DROPPED")
     return bad
 
 

@@ -28,7 +28,8 @@ from repro.core.topology import Schedule, round_robin, uniform_mesh
 from repro.optim.compression import CompressionConfig, compressed_bytes
 
 __all__ = ["PodFabric", "CollectivePlan", "plan_ring_allreduce",
-           "allreduce_time_s", "ring_schedule"]
+           "allreduce_time_s", "ring_schedule", "shard_group_offsets",
+           "gather_node_row", "exchange_sum", "exchange_min", "exchange_max"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,75 @@ def plan_ring_allreduce(total_bytes: int, fabric: PodFabric,
             remaining -= sent
             t += 1
     return CollectivePlan(transfers, t, 2 * (P - 1) * chunk, sched)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-fabric exchange primitives (ISSUE 7)
+#
+# The sharded data plane (repro.core.fabric.simulate_sharded) partitions the
+# packet vector over a 1-D "tor" mesh axis in contiguous global-index blocks
+# and keeps the per-ToR aggregates (calendar-queue occupancy, backlog views)
+# replicated. Cross-shard traffic is therefore never exchanged packet by
+# packet — which would be ragged — but as *per-key aggregates* through the
+# static-capacity buffers below: one all_gather of a [num_keys] vector per
+# admission site ([num_shards, num_keys] on every shard) and one psum/pmin/
+# pmax per replicated-state update site. The buffers are static-shape by
+# construction, so there is no overflow path to account for: an aggregate
+# always fits, and the conservation checker
+# (repro.core.toolkit.check_sharding) proves no packet is lost to the
+# exchange. These run *inside* shard_map-traced code; jax is imported
+# lazily so the planning half of this module stays importable without it.
+# ---------------------------------------------------------------------------
+
+
+def shard_group_offsets(local_bytes, axis: str, num_shards: int):
+    """Exclusive per-key byte offsets of all *earlier* shards on ``axis``.
+
+    ``local_bytes`` is this shard's per-key wanted-byte total ([num_keys]).
+    Because packets are sharded in contiguous global-index blocks, a local
+    packet's global FIFO byte prefix within its admission group is its local
+    prefix plus the wanted bytes of every lower-indexed shard — exactly the
+    value returned here. Shifting the per-key capacities down by this offset
+    turns any *local* FIFO admission backend into the exact *global* one
+    (the Pallas admission kernel dispatches under shard_map unchanged).
+    """
+    import jax
+    import jax.numpy as jnp
+    buf = jax.lax.all_gather(local_bytes, axis)        # [D, num_keys], static
+    before = jnp.arange(num_shards) < jax.lax.axis_index(axis)
+    return jnp.sum(jnp.where(before[:, None], buf, 0), axis=0)
+
+
+def gather_node_row(local_row, axis: str, n: int):
+    """Reassemble a full per-node row ([n]) from per-shard owned blocks.
+
+    Per-slice node tensors (failure ``link_cap`` rows, ``node_ok``, control
+    ``phase_off``/``skew_miss``) are stored sharded over owned ToR rows
+    (padded to ``num_shards * ceil(n / num_shards)``); the fabric gathers
+    the one row it needs per slice and drops the padding."""
+    import jax
+    return jax.lax.all_gather(local_row, axis, tiled=True)[:n]
+
+
+def exchange_sum(x, axis: str):
+    """psum reconciliation for replicated aggregate state (occupancy deltas,
+    per-slice scalar stats)."""
+    import jax
+    return jax.lax.psum(x, axis)
+
+
+def exchange_min(x, axis: str):
+    """pmin reconciliation for monotone backlog cuts (first-rejected global
+    packet index per admission group / receiver)."""
+    import jax
+    return jax.lax.pmin(x, axis)
+
+
+def exchange_max(x, axis: str):
+    """pmax reconciliation for monotone high-water state (per-flow max_seq,
+    push-back block_until buckets)."""
+    import jax
+    return jax.lax.pmax(x, axis)
 
 
 def allreduce_time_s(total_bytes: int, fabric: PodFabric, aligned: bool,

@@ -28,11 +28,85 @@ from repro.models.config import ArchConfig
 
 __all__ = ["param_shardings", "batch_shardings", "cache_shardings",
            "data_axes", "replicated", "opt_state_shardings",
-           "frontend_sharding"]
+           "frontend_sharding", "fabric_mesh", "block_len", "shard_owner",
+           "pad_packet_axis", "pad_node_rows", "node_rows_bytes_per_device"]
 
 
 def data_axes(mesh: Mesh):
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# Sharded-fabric mesh layout (ISSUE 7)
+#
+# The fabric hot path (repro.core.fabric.simulate_sharded) runs under a 1-D
+# "tor" mesh: packets are partitioned in contiguous global-index blocks
+# (shard d owns global indices [d * block_len, (d + 1) * block_len)), and
+# per-slice node tensors (failure link_cap, node_ok, control phase_off /
+# skew_miss) are partitioned by *owned ToR rows* with the same contiguous-
+# block rule, so each device materializes only its ~N/D slice of the dense
+# [S, N, N] masks. Everything that does not divide evenly is padded up to
+# the next multiple of the shard count with inert fill (packets that never
+# inject, healthy rows) rather than replicated — the fabric's own global-
+# index bookkeeping makes padding invisible.
+# ---------------------------------------------------------------------------
+
+
+def fabric_mesh(num_shards: int | None = None, devices=None):
+    """A 1-D ``("tor",)`` mesh over the first ``num_shards`` devices (all
+    visible devices by default). Returns ``(mesh, num_shards)``."""
+    devs = list(jax.devices() if devices is None else devices)
+    d = len(devs) if num_shards is None else int(num_shards)
+    if d < 1 or d > len(devs):
+        raise ValueError(f"num_shards={num_shards} needs 1..{len(devs)} "
+                         f"devices ({len(devs)} visible)")
+    return Mesh(np.asarray(devs[:d]), ("tor",)), d
+
+
+def block_len(n: int, num_shards: int) -> int:
+    """Contiguous-block width per shard: ``ceil(n / num_shards)`` (the last
+    shard's block is padded when ``num_shards`` does not divide ``n``)."""
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    return -(-max(n, 1) // num_shards)
+
+
+def shard_owner(idx, n: int, num_shards: int):
+    """Owning shard of global index ``idx`` under the contiguous-block
+    partition (host-side helper for the toolkit soundness checker)."""
+    return np.asarray(idx) // block_len(n, num_shards)
+
+
+def pad_packet_axis(arr: np.ndarray, num_shards: int, fill) -> np.ndarray:
+    """Pad axis 0 (the packet axis) up to a multiple of ``num_shards`` with
+    ``fill`` (callers pick a fill that can never act, e.g. ``t_inject =
+    num_slices``)."""
+    p = arr.shape[0]
+    pad = block_len(p, num_shards) * num_shards - p
+    if pad == 0:
+        return arr
+    return np.concatenate([arr, np.full((pad,) + arr.shape[1:], fill,
+                                        arr.dtype)])
+
+
+def pad_node_rows(arr: np.ndarray, num_shards: int, fill) -> np.ndarray:
+    """Pad axis 1 (the node-row axis of ``[S, N, ...]`` masks) up to a
+    multiple of ``num_shards`` with inert ``fill`` (healthy / no-op rows);
+    the fabric's owned-row bookkeeping never reads the padding."""
+    n = arr.shape[1]
+    pad = block_len(n, num_shards) * num_shards - n
+    if pad == 0:
+        return arr
+    shape = (arr.shape[0], pad) + arr.shape[2:]
+    return np.concatenate([arr, np.full(shape, fill, arr.dtype)], axis=1)
+
+
+def node_rows_bytes_per_device(num_slices: int, n: int, num_shards: int,
+                               itemsize: int = 4) -> int:
+    """Per-device bytes of a row-sharded ``[S, N, N]`` mask tensor — the
+    footprint contract the dense-mask regression test pins (each device
+    holds only its owned ``ceil(N / D)`` rows, not the full ``N``)."""
+    return num_slices * block_len(n, num_shards) * n * itemsize
 
 
 def _model_size(mesh: Mesh) -> int:

@@ -67,8 +67,16 @@ def time_flow_lookup(tbl_next, tbl_dep, node, dst, hashv, *, impl="pallas",
     return _tfl_pallas(tbl_next, tbl_dep, node, dst, hashv, **kw)
 
 
-def admission_admit(key, size, want, cap_left, *, num_keys, impl="pallas",
-                    **kw):
+def admission_admit(key, size, want, cap_left, *, num_keys, cap_offset=None,
+                    impl="pallas", **kw):
+    """FIFO group admission; ``cap_offset`` is the shard_map dispatch hook:
+    under the sharded fabric each shard passes its earlier-shards per-key
+    wanted-byte prefix (:func:`repro.distributed.collectives.shard_group_offsets`)
+    and the kernel runs unchanged on the shifted capacities — local FIFO
+    admission against ``cap_left - cap_offset`` is exactly global FIFO
+    admission for contiguous-block packet sharding."""
+    if cap_offset is not None:
+        cap_left = jnp.asarray(cap_left) - cap_offset
     if impl == "ref":
         return _ref.admission_admit_ref(key, size, want, cap_left,
                                         num_keys=num_keys)

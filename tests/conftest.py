@@ -1,5 +1,15 @@
 """Shared test configuration.
 
+Multi-device harness: the sharded-fabric differential suites
+(``test_fabric_sharded.py``, ``test_sharded_prop.py``) need more than one
+XLA device, and CI runners are single-CPU hosts — so before anything can
+import jax we force the CPU backend to expose 8 devices via ``XLA_FLAGS``.
+This must happen at conftest import time (jax reads the flag once, at
+backend init); if the caller already set a device-count flag we respect it.
+Tests that genuinely need the devices use the ``eight_devices`` fixture /
+``multidevice`` marker, which skip (rather than fail) when a previously
+initialized jax pins the count lower.
+
 Some test modules use ``hypothesis`` for property-based sweeps. The library
 is optional in minimal containers; when it is absent we skip collecting
 those modules instead of erroring the whole run at import time — *except in
@@ -10,15 +20,22 @@ is a hard collection error instead.
 import importlib.util
 import os
 
+import pytest
+
+_DEVFLAG = "--xla_force_host_platform_device_count"
+if _DEVFLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_DEVFLAG}=8").strip()
+
 if importlib.util.find_spec("hypothesis") is None:
     if os.environ.get("CI"):
         raise RuntimeError(
             "hypothesis is not installed but CI=1: the property-based "
             "suites (test_admission_prop, test_controlplane_prop, "
             "test_failures_prop, test_invariants_prop, test_routing, "
-            "test_topology, test_kernels, test_distributed, test_optim) "
-            "would be silently skipped. Install hypothesis in the CI "
-            "environment.")
+            "test_sharded_prop, test_topology, test_kernels, "
+            "test_distributed, test_optim) would be silently skipped. "
+            "Install hypothesis in the CI environment.")
     collect_ignore = [
         "test_admission_prop.py",
         "test_controlplane_prop.py",
@@ -28,5 +45,35 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_kernels.py",
         "test_optim.py",
         "test_routing.py",
+        "test_sharded_prop.py",
         "test_topology.py",
     ]
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs >= 8 XLA devices (forced host-platform CPU "
+        "devices; skipped when jax was initialized with fewer)")
+
+
+def pytest_collection_modifyitems(config, items):
+    import jax
+    if jax.device_count() >= 8:
+        return
+    skip = pytest.mark.skip(
+        reason=f"needs 8 XLA devices, found {jax.device_count()} (jax "
+               "initialized before conftest could set "
+               f"{_DEVFLAG}=8)")
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
+
+
+@pytest.fixture
+def eight_devices():
+    """Gate for tests that shard over the forced 8-device CPU mesh."""
+    import jax
+    if jax.device_count() < 8:
+        pytest.skip(f"needs 8 XLA devices, found {jax.device_count()}")
+    return jax.devices()[:8]
