@@ -90,7 +90,12 @@ def run(quick: bool = False):
     t_fail = S // 3
     # the hot pair's direct circuit flaps dark, permanently
     trace = FailureTrace().link_flap(HOT[0], HOT[1], t_fail)
-    masks = compile_masks(trace, sched, S)
+    # compile once and pin on device: every variant below feeds the same
+    # dense [S, N, N] mask tensor, and without this each simulate /
+    # simulate_phased / reconfigure call re-uploads its own copy (~50 MB
+    # at 10^3 slices x 108 ToRs); on_device makes the jnp.asarray inside
+    # each entry point a no-op view of one buffer
+    masks = compile_masks(trace, sched, S).on_device()
     routing = hoho(sched)
     tables = FabricTables.build(sched, routing)
 

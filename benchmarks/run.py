@@ -61,6 +61,7 @@ MODULES = [
     "min_slice",
     "kernels_bench",
     "fabric_sharded",
+    "telemetry_overhead",
     "roofline",
 ]
 

@@ -16,14 +16,18 @@ from .topology import (Circuit, Schedule, connect, round_robin, edmonds, bvn,
 from .routing import (CompiledRouting, direct, vlb, opera, ucmp, hoho, ecmp,
                       wcmp, ksp, neighbors, earliest_path, add_entry)
 from .timeflow import Entry, TimeFlowTable
-from .fabric import (FabricConfig, FabricTables, Workload, SimResult,
-                     simulate, simulate_sharded, simulate_fleet)
+from .fabric import (FabricConfig, FabricState, FabricTables, Workload,
+                     SimResult, simulate, simulate_sharded, simulate_fleet,
+                     simulate_incremental, init_state, ingest, step_slices,
+                     finalize)
+from .telemetry import TelemetryConfig, TelemetryCounters
 from .net import OpenOpticsNet, clos_routing
 from .reconfigure import (ReconfigConfig, ReconfigResult, reconfigure,
                           reconfigure_fleet)
 from .failures import (FailureEvent, FailureTrace, FailureMasks,
                        compile_masks, random_trace, repair, surviving_conn,
-                       backup_tables, fast_reroute, simulate_phased)
+                       backup_tables, backup_tables_dp, fast_reroute,
+                       simulate_phased)
 from .controlplane import (ControlEvent, ControlTrace, ControlMasks,
                            compile_control, random_control_trace,
                            install_schedule)
@@ -39,13 +43,15 @@ __all__ = [
     "CompiledRouting", "direct", "vlb", "opera", "ucmp", "hoho", "ecmp",
     "wcmp", "ksp", "neighbors", "earliest_path", "add_entry",
     "Entry", "TimeFlowTable",
-    "FabricConfig", "FabricTables", "Workload", "SimResult", "simulate",
-    "simulate_sharded", "simulate_fleet",
+    "FabricConfig", "FabricState", "FabricTables", "Workload", "SimResult",
+    "simulate", "simulate_sharded", "simulate_fleet", "simulate_incremental",
+    "init_state", "ingest", "step_slices", "finalize",
+    "TelemetryConfig", "TelemetryCounters",
     "OpenOpticsNet", "clos_routing",
     "ReconfigConfig", "ReconfigResult", "reconfigure", "reconfigure_fleet",
     "FailureEvent", "FailureTrace", "FailureMasks", "compile_masks",
     "random_trace", "repair", "surviving_conn", "backup_tables",
-    "fast_reroute", "simulate_phased",
+    "backup_tables_dp", "fast_reroute", "simulate_phased",
     "ControlEvent", "ControlTrace", "ControlMasks", "compile_control",
     "random_control_trace", "install_schedule",
     "synthesize", "flow_fcts", "TRACES",

@@ -91,12 +91,16 @@ import jax
 import jax.numpy as jnp
 
 from .routing import CompiledRouting, first_direct_offsets
+from .telemetry import (TELE_KEYS, TelemetryConfig, TelemetryCounters,
+                        counters_from_out)
 from .topology import Schedule
 from ..kernels.admission import admission_admit
 from ..kernels.time_flow_lookup import time_flow_lookup
 
 __all__ = ["FabricConfig", "Workload", "FabricTables", "simulate",
-           "simulate_sharded", "simulate_fleet", "SimResult"]
+           "simulate_sharded", "simulate_fleet", "SimResult", "FabricState",
+           "init_state", "ingest", "step_slices", "finalize",
+           "simulate_incremental"]
 
 NOT_INJECTED = -1
 DELIVERED = -2
@@ -232,6 +236,9 @@ class SimResult:
     blocked_inj: np.ndarray   # [S] injections deferred by push-back
     slice_miss: np.ndarray    # [S] packets that missed their slice
     reorder_cnt: np.ndarray   # scalar: out-of-order deliveries
+    # per-ToR per-slice counter frames when simulate ran with telemetry=
+    # (None otherwise; see repro.core.telemetry)
+    telemetry: "TelemetryCounters | None" = None
 
 
 # ---------------------------------------------------------------------------
@@ -413,7 +420,8 @@ def _build_caps_all(conn, cfg: FabricConfig, N: int):
 
 
 def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
-             num_slices: int, failures=None, control=None) -> SimResult:
+             num_slices: int, failures=None, control=None,
+             telemetry: TelemetryConfig | None = None) -> SimResult:
     """Run the fabric for ``num_slices`` slices.
 
     Args:
@@ -444,6 +452,13 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
             exempt). Requires ``cfg.lookup_impl == "jnp"`` (per-ToR
             local slices make the table lookup per-packet in time).
             ``None`` (default) traces exactly the zero-skew program.
+        telemetry: optional :class:`repro.core.telemetry.TelemetryConfig`
+            (static, like ``cfg``). When set, per-ToR per-slice counters
+            accumulate in the scan carry and come back as
+            ``SimResult.telemetry``; every non-telemetry field is
+            unchanged. ``None`` (default) traces exactly the
+            pre-telemetry program — the same presence rule as
+            ``failures`` / ``control``.
 
     Everything inside is jitted; re-compilation happens per (packet count,
     table shapes, config). For a loop that *recompiles the tables on-device
@@ -477,17 +492,21 @@ def simulate(tables: FabricTables, wl: Workload, cfg: FabricConfig,
         j["skew_miss"] = dev(control.skew_miss, jnp.bool_)
     per_packet_mp = tables.multipath == "packet"
     out = _simulate_jit(j, cfg, num_slices, per_packet_mp,
-                        int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1)
-    return SimResult(**{k: np.asarray(v) for k, v in out.items()})
+                        int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1,
+                        telemetry)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    tele = counters_from_out(out, telemetry)
+    return SimResult(**out, telemetry=tele)
 
 
-def _init_state(j, num_flows: int):
+def _init_state(j, num_flows: int, telemetry: TelemetryConfig | None = None):
     """Fresh per-packet scan state for the workload in ``j`` (all packets
-    un-injected, empty calendar queues)."""
+    un-injected, empty calendar queues). With ``telemetry`` the per-slice
+    counter accumulators join the carry (reset by the step each slice)."""
     T, N, U = j["conn"].shape
     P = j["src"].shape[0]
     NQ = N * 2 * T
-    return dict(
+    st = dict(
         loc=jnp.full((P,), NOT_INJECTED, jnp.int32),
         nxt=jnp.full((P,), -1, jnp.int32),
         dep=jnp.zeros((P,), jnp.int32),
@@ -499,10 +518,19 @@ def _init_state(j, num_flows: int):
         reorder=jnp.zeros((), jnp.int32),
         occ=jnp.zeros((NQ,), jnp.int32),  # calendar-queue occupancy [N * 2T]
     )
+    if telemetry is not None:
+        st.update(
+            _tin=jnp.zeros((N,), jnp.int32),    # injected bytes per src ToR
+            _tdef=jnp.zeros((N,), jnp.int32),   # deferred bytes per switch
+            _tdrop=jnp.zeros((N,), jnp.int32),  # dropped bytes per switch
+            _thwm=jnp.zeros((N,), jnp.int32),   # switch-buffer high water
+        )
+    return st
 
 
 def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
-               axis=None, num_shards=1, batched=False):
+               axis=None, num_shards=1, batched=False,
+               telemetry: TelemetryConfig | None = None):
     """Build the per-slice ``step(state, t) -> (state, stats)`` function over
     the arrays in ``j`` (schedule + tables + workload).
 
@@ -579,6 +607,21 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
     has_ctrl = "phase_off" in j
     has_vers = "tf_next_v" in j
     Tr = j["tf_next_v"].shape[1] if has_vers else j["tf_next"].shape[0]
+    # Telemetry counters (repro.core.telemetry): per-slice per-ToR rows
+    # accumulated in the scan carry ("_tin"/"_tdef"/"_tdrop"/"_thwm", reset
+    # each slice) and emitted with the per-slice stats. All updates go
+    # through upd_add, so sharded runs psum-reconcile them exactly like the
+    # occupancy map. telemetry=None folds every counter away: the traced
+    # program is exactly the pre-telemetry one.
+    has_tele = telemetry is not None
+    # Incremental windows (step_slices) pass mask tensors covering only
+    # [mask_t0, mask_t0 + window); the traced offset re-bases the absolute
+    # slice index for *mask* lookups only. Absent (one-shot runs), indexing
+    # stays absolute and the program is unchanged.
+    if "mask_t0" in j:
+        mt = lambda t: t - j["mask_t0"]
+    else:
+        mt = lambda t: t
     # population tiers for the per-phase compact views (see module
     # docstring). Sharded, the tier conds are disabled outright: their
     # predicates are shard-local live counts, so shards could pick
@@ -598,9 +641,9 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
         holds only this shard's owned ToR rows (``[S, ceil(N/D)]``, padded)
         and the full row is gathered once per slice."""
         if axis is None:
-            return j[name][t]
+            return j[name][mt(t)]
         from ..distributed.collectives import gather_node_row
-        return gather_node_row(j[name][t], axis, N)
+        return gather_node_row(j[name][mt(t)], axis, N)
 
     caps_all = _build_caps_all(j["conn"], cfg, N)          # [T, NKEY]
 
@@ -626,7 +669,7 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
         # parity tests. Sharded, each shard scatters only its owned
         # link_cap rows (with global row keys) and the partial key maps are
         # psum-exchanged; the electrical row is added once, post-exchange.
-        lc = j["link_cap"][t]                  # [N, N] ([rows_local, N] sharded)
+        lc = j["link_cap"][mt(t)]              # [N, N] ([rows_local, N] sharded)
         NL = lc.shape[0]
         if axis is None:
             rows = jnp.arange(NL, dtype=jnp.int32)
@@ -687,6 +730,12 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
 
     def step(state, t):
         s = dict(state)
+        if has_tele:
+            # per-slice accumulators: zeroed here, filled by the phases
+            # below, emitted with the stats at the end of the slice
+            s["_tin"] = jnp.zeros((N,), jnp.int32)
+            s["_tdef"] = jnp.zeros((N,), jnp.int32)
+            s["_tdrop"] = jnp.zeros((N,), jnp.int32)
         h = mp_hash(t)
         # full per-node rows of the (possibly row-sharded) mask tensors,
         # gathered once per slice
@@ -740,6 +789,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
                 s, v = dict(op[0]), dict(op[1])
                 s["occ"] = upd_add(s["occ"], (qb, -v["size"], full),
                                    (vbucket(v, t + 1), v["size"], full))
+                if has_tele:
+                    s["_tdef"] = upd_add(
+                        s["_tdef"],
+                        (jnp.clip(v["loc"], 0, N - 1), v["size"], full))
                 v["relook"] = v["relook"] | full
                 v["dep"] = jnp.where(full, t + 1, v["dep"])
                 if cfg.pushback:
@@ -817,6 +870,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
             else:
                 blocked = jnp.zeros(v["ready"].shape, bool)
             inject = v["ready"] & ~blocked
+            if has_tele:
+                s["_tin"] = upd_add(
+                    s["_tin"],
+                    (jnp.clip(v["src"], 0, N - 1), v["size"], inject))
             v["loc"] = jnp.where(inject, v["src"], v["loc"])
             v["nxt"] = jnp.where(inject, nxt_i, v["nxt"])
             v["dep"] = jnp.where(inject, t + off_i, v["dep"])
@@ -875,6 +932,8 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
         # -- 3. transmission with cut-through chaining ---------------------
         used = jnp.zeros((NKEY,), jnp.int32)
         buf_now = on_switch_bytes(s["occ"])
+        if has_tele:
+            s["_thwm"] = buf_now    # slice-local high-water, maxed per hop
 
         def hop_logic(s, v, used, buf_now, backlog_min, rx_backlog_min,
                       resc_min):
@@ -1024,12 +1083,20 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
             # also pushes the sender back (paper §5.2)
             buf_now = upd_add(buf_now, (jnp.clip(v["loc"], 0, N - 1),
                                         v["size"], in_transit))
+            if has_tele:
+                s["_thwm"] = jnp.maximum(s["_thwm"], buf_now)
             overflow = in_transit & \
                 (buf_now[jnp.clip(v["loc"], 0, N - 1)] > cfg.switch_buffer)
             if cfg.pushback:
                 upd = jnp.where(overflow, t + T, 0)
                 s["block_until"] = s["block_until"].at[
                     jnp.where(overflow, v["dst"], 0), v["dep"] % T].max(upd)
+            if has_tele:
+                # count dropped bytes at the switch the packet overflowed,
+                # before loc is overwritten with the DROPPED sentinel
+                s["_tdrop"] = upd_add(
+                    s["_tdrop"],
+                    (jnp.clip(v["loc"], 0, N - 1), v["size"], overflow))
             v["loc"] = jnp.where(overflow, DROPPED, v["loc"])
             arrived = in_transit & ~overflow
             s["occ"] = upd_add(s["occ"], (vbucket(v, t + off_t), v["size"],
@@ -1124,6 +1191,10 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
             s["occ"] = upd_add(
                 s["occ"], (jnp.clip(s["loc"], 0, N - 1) * T2 + bump % T2,
                            j["size"], missed))
+            if has_tele:
+                s["_tdef"] = upd_add(
+                    s["_tdef"],
+                    (jnp.clip(s["loc"], 0, N - 1), j["size"], missed))
             s["dep"] = jnp.where(missed, bump, s["dep"])
             if cfg.pushback:
                 upd = jnp.where(missed, t + T, 0)
@@ -1154,36 +1225,91 @@ def _make_step(j, cfg: FabricConfig, per_packet_mp: bool, num_flows: int,
             buf_bytes=on_sw, offl_bytes=off_sw,
             blocked_inj=n_blocked, slice_miss=miss_cnt,
         )
+        if has_tele:
+            # circuit utilization: optical bytes moved vs granted, per
+            # source switch (the electrical egress column N is excluded).
+            # tele_delivered / tele_lat_hist are NOT accumulated here:
+            # delivery is terminal (t_del is written once), so both are
+            # reconstructed from the terminal packet state with one P-wide
+            # scatter per run (_tele_delivery_rows) instead of a
+            # full-population pass every slice.
+            stats.update(
+                tele_injected=s["_tin"],
+                tele_deferred=s["_tdef"], tele_dropped=s["_tdrop"],
+                tele_qhwm=jnp.maximum(s["_thwm"], on_sw),
+                tele_util_used=used.reshape(N, N + 1)[:, :N].sum(axis=1),
+                tele_util_cap=caps.reshape(N, N + 1)[:, :N].sum(axis=1),
+            )
         return s, stats
 
     return step
 
 
-def _sim_out(final, ys):
+def _tele_delivery_rows(final, j, telemetry, num_slices: int, t0=0,
+                        axis=None):
+    """Per-slice delivered rows [S, N] + latency histogram [S, B] from the
+    terminal packet state. Delivery is terminal — ``t_del`` is written
+    exactly once — so one scatter over the population here is bit-identical
+    to accumulating ``t_del == t`` rows inside the scan, at 1/S the cost.
+    ``t0`` re-bases window runs (:func:`step_slices`); deliveries outside
+    [t0, t0 + num_slices) belong to other windows (or never landed) and
+    scatter nothing. Sharded, each shard scatters its packet block and the
+    rows are psum-reconciled to match the replicated in-scan counters."""
+    N = j["conn"].shape[1]
+    rel = final["t_del"] - t0
+    ok = (rel >= 0) & (rel < num_slices)
+    relc = jnp.clip(rel, 0, max(num_slices - 1, 0))
+    rows = jnp.zeros((num_slices, N), jnp.int32).at[
+        relc, jnp.clip(j["dst"], 0, N - 1)].add(jnp.where(ok, j["size"], 0))
+    # bucket i counts latencies in (edges[i-1], edges[i]]; last is overflow
+    edges = jnp.asarray(telemetry.lat_edges, jnp.int32)
+    lat = jnp.maximum(final["t_del"] - j["t_inject"], 0)
+    bucket = jnp.searchsorted(edges, lat, side="left").astype(jnp.int32)
+    hist = jnp.zeros((num_slices, telemetry.num_buckets), jnp.int32).at[
+        relc, bucket].add(jnp.where(ok, 1, 0))
+    if axis is not None:
+        rows = jax.lax.psum(rows, axis)
+        hist = jax.lax.psum(hist, axis)
+    return rows, hist
+
+
+def _sim_out(final, ys, j=None, telemetry=None, num_slices=None, axis=None):
     """Assemble the result dict from the scan's final state + stacked
     per-slice stats (shared by the single-device, sharded, and vmapped
-    entry points)."""
-    return dict(
+    entry points). In-scan telemetry rows pass through when present; the
+    delivery-derived rows are reconstructed post-scan."""
+    out = dict(
         t_deliver=final["t_del"], loc_final=final["loc"], nhops=final["nhops"],
         delivered_bytes=ys["delivered_bytes"], dropped=ys["dropped"],
         buf_bytes=ys["buf_bytes"], offl_bytes=ys["offl_bytes"],
         blocked_inj=ys["blocked_inj"], slice_miss=ys["slice_miss"],
         reorder_cnt=final["reorder"],
     )
+    for k in TELE_KEYS:
+        if k in ys:
+            out[k] = ys[k]
+    if telemetry is not None:
+        rows, hist = _tele_delivery_rows(final, j, telemetry, num_slices,
+                                         axis=axis)
+        out["tele_delivered"] = rows
+        out["tele_lat_hist"] = hist
+    return out
 
 
 def _sim_body(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
-              num_flows: int, batched: bool = False):
-    step = _make_step(j, cfg, per_packet_mp, num_flows, batched=batched)
-    final, ys = jax.lax.scan(step, _init_state(j, num_flows),
+              num_flows: int, batched: bool = False, telemetry=None):
+    step = _make_step(j, cfg, per_packet_mp, num_flows, batched=batched,
+                      telemetry=telemetry)
+    final, ys = jax.lax.scan(step, _init_state(j, num_flows, telemetry),
                              jnp.arange(num_slices, dtype=jnp.int32))
-    return _sim_out(final, ys)
+    return _sim_out(final, ys, j, telemetry, num_slices)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
 def _simulate_jit(j, cfg: FabricConfig, num_slices: int, per_packet_mp: bool,
-                  num_flows: int):
-    return _sim_body(j, cfg, num_slices, per_packet_mp, num_flows)
+                  num_flows: int, telemetry: TelemetryConfig | None = None):
+    return _sim_body(j, cfg, num_slices, per_packet_mp, num_flows,
+                     telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -1200,21 +1326,23 @@ _NODE_ROW_KEYS = ("link_cap", "node_ok", "phase_off", "skew_miss")
 _PACKET_OUT = ("t_deliver", "loc_final", "nhops", "adm_shard")
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5, 6, 7))
 def _simulate_sharded_jit(j, cfg: FabricConfig, num_slices: int,
                           per_packet_mp: bool, num_flows: int,
-                          num_shards: int, mesh):
+                          num_shards: int, mesh,
+                          telemetry: TelemetryConfig | None = None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
     def body(jl):
         step = _make_step(jl, cfg, per_packet_mp, num_flows,
-                          axis="tor", num_shards=num_shards)
-        st0 = _init_state(jl, num_flows)
+                          axis="tor", num_shards=num_shards,
+                          telemetry=telemetry)
+        st0 = _init_state(jl, num_flows, telemetry)
         st0["adm_shard"] = jnp.full_like(st0["loc"], -1)
         final, ys = jax.lax.scan(step, st0,
                                  jnp.arange(num_slices, dtype=jnp.int32))
-        out = _sim_out(final, ys)
+        out = _sim_out(final, ys, jl, telemetry, num_slices, axis="tor")
         # reorder was carried as a per-shard partial count (see _make_step)
         out["reorder_cnt"] = jax.lax.psum(out["reorder_cnt"], "tor")
         out["adm_shard"] = final["adm_shard"]
@@ -1234,6 +1362,9 @@ def _simulate_sharded_jit(j, cfg: FabricConfig, num_slices: int,
         buf_bytes=PS(), offl_bytes=PS(), blocked_inj=PS(), slice_miss=PS(),
         reorder_cnt=PS(),
     )
+    if telemetry is not None:
+        # counter rows are psum-reconciled inside the step -> replicated
+        out_specs.update({k: PS() for k in TELE_KEYS})
     return shard_map(body, mesh=mesh, in_specs=(in_specs,),
                      out_specs=out_specs, check_rep=False)(j)
 
@@ -1249,7 +1380,9 @@ def _check_impls(cfg: FabricConfig):
 
 def simulate_sharded(tables: FabricTables, wl: Workload, cfg: FabricConfig,
                      num_slices: int, num_shards: int | None = None,
-                     failures=None, control=None, with_debug: bool = False):
+                     failures=None, control=None,
+                     telemetry: TelemetryConfig | None = None,
+                     with_debug: bool = False):
     """Run :func:`simulate` sharded over a 1-D device mesh — bit-identical
     to the single-device path (asserted by the multi-device differential
     suite, ``tests/test_fabric_sharded.py``).
@@ -1313,13 +1446,14 @@ def simulate_sharded(tables: FabricTables, wl: Workload, cfg: FabricConfig,
     num_flows = int(max(wl.flow.max() + 1, 1)) if P else 1
     out = _simulate_sharded_jit(j, cfg, num_slices,
                                 tables.multipath == "packet", num_flows,
-                                D, mesh)
+                                D, mesh, telemetry)
     out = {k: np.asarray(v) for k, v in out.items()}
     adm_shard = out.pop("adm_shard")[:P]
     for k in _PACKET_OUT:
         if k in out:
             out[k] = out[k][:P]      # drop the block padding
-    res = SimResult(**out)
+    tele = counters_from_out(out, telemetry)
+    res = SimResult(**out, telemetry=tele)
     if with_debug:
         return res, dict(adm_shard=adm_shard,
                          owner=dshard.shard_owner(np.arange(P), P, D),
@@ -1327,17 +1461,20 @@ def simulate_sharded(tables: FabricTables, wl: Workload, cfg: FabricConfig,
     return res
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
 def _simulate_fleet_jit(jb, cfg: FabricConfig, num_slices: int,
-                        per_packet_mp: bool, num_flows: int):
+                        per_packet_mp: bool, num_flows: int,
+                        telemetry: TelemetryConfig | None = None):
     return jax.vmap(
         lambda jj: _sim_body(jj, cfg, num_slices, per_packet_mp, num_flows,
-                             batched=True)
+                             batched=True, telemetry=telemetry)
     )(jb)
 
 
 def simulate_fleet(tables, wls, cfg: FabricConfig, num_slices: int,
-                   failures=None, control=None) -> list[SimResult]:
+                   failures=None, control=None,
+                   telemetry: TelemetryConfig | None = None
+                   ) -> list[SimResult]:
     """Run a whole scenario sweep as **one** batched XLA program:
     :func:`simulate` vmapped over a scenario axis — bit-identical to the
     per-scenario Python loop, without per-scenario dispatch overhead. The
@@ -1423,6 +1560,234 @@ def simulate_fleet(tables, wls, cfg: FabricConfig, num_slices: int,
     num_flows = max(max(int(w.flow.max()) + 1 if w.num_packets else 1, 1)
                     for w in wls)
     out = _simulate_fleet_jit(jb, cfg, num_slices,
-                              tabs[0].multipath == "packet", num_flows)
+                              tabs[0].multipath == "packet", num_flows,
+                              telemetry)
     out = {k: np.asarray(v) for k, v in out.items()}
-    return [SimResult(**{k: v[i] for k, v in out.items()}) for i in range(B)]
+    teles = [counters_from_out(out, telemetry, index=i) for i in range(B)]
+    for k in TELE_KEYS:
+        out.pop(k, None)
+    return [SimResult(**{k: v[i] for k, v in out.items()}, telemetry=teles[i])
+            for i in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# incremental simulation (ISSUE 8): init_state / ingest / step_slices /
+# finalize — the one-shot scan split open so fabric state carries across
+# calls, which is what lets OpenOpticsNet run as a long-lived clocked
+# service (repro.core.net).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FabricState:
+    """Live fabric state between :func:`step_slices` calls.
+
+    ``j`` holds the deployed tables + the packet population so far (device
+    arrays, *without* mask tensors — those are window-scoped and joined per
+    :func:`step_slices` call); ``state`` is the scan carry exactly as
+    :func:`_make_step` leaves it (per-packet sentinels, calendar-queue
+    occupancy, push-back map, reorder tracking, telemetry accumulators).
+    ``clock`` is the absolute slice index the next window starts at;
+    ``chunks`` collects each window's stacked per-slice stats (host side,
+    concatenated by :func:`finalize`).
+    """
+
+    j: dict
+    state: dict
+    cfg: FabricConfig
+    telemetry: "TelemetryConfig | None"
+    per_packet_mp: bool
+    num_flows: int
+    clock: int = 0
+    chunks: list = dataclasses.field(default_factory=list)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.j["conn"].shape[1])
+
+    @property
+    def num_packets(self) -> int:
+        return int(self.j["src"].shape[0])
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6, 7))
+def _window_jit(j, state, t0, cfg: FabricConfig, n_slices: int,
+                per_packet_mp: bool, num_flows: int,
+                telemetry: TelemetryConfig | None = None):
+    step = _make_step(j, cfg, per_packet_mp, num_flows, telemetry=telemetry)
+    final, ys = jax.lax.scan(step, state,
+                             t0 + jnp.arange(n_slices, dtype=jnp.int32))
+    if telemetry is not None:
+        # window-local delivery rows from the terminal state: deliveries
+        # from earlier windows fall outside [t0, t0 + n) and scatter nothing
+        rows, hist = _tele_delivery_rows(final, j, telemetry, n_slices, t0)
+        ys = dict(ys, tele_delivered=rows, tele_lat_hist=hist)
+    return final, ys
+
+
+def init_state(tables: FabricTables, wl: Workload | None, cfg: FabricConfig,
+               telemetry: TelemetryConfig | None = None) -> FabricState:
+    """Open an incremental run: deployed tables + an initial packet
+    population (``None`` for an empty fabric — :func:`ingest` adds traffic
+    later). The same static knobs as :func:`simulate` apply."""
+    _check_impls(cfg)
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    j = dict(
+        conn=dev(tables.conn), tf_next=dev(tables.tf_next),
+        tf_dep=dev(tables.tf_dep), inj_next=dev(tables.inj_next),
+        inj_dep=dev(tables.inj_dep), first_direct=dev(tables.first_direct),
+    )
+    if wl is None:
+        z = np.zeros((0,), np.int32)
+        j.update(src=dev(z), dst=dev(z), size=dev(z), t_inject=dev(z),
+                 flow=dev(z), seq=dev(z), is_eleph=dev(z, jnp.bool_))
+        num_flows = 1
+    else:
+        j.update(src=dev(wl.src), dst=dev(wl.dst), size=dev(wl.size),
+                 t_inject=dev(wl.t_inject), flow=dev(wl.flow),
+                 seq=dev(wl.seq), is_eleph=dev(wl.is_eleph, jnp.bool_))
+        num_flows = int(max(wl.flow.max() + 1, 1)) if wl.num_packets else 1
+    return FabricState(j=j, state=_init_state(j, num_flows, telemetry),
+                       cfg=cfg, telemetry=telemetry,
+                       per_packet_mp=tables.multipath == "packet",
+                       num_flows=num_flows)
+
+
+def ingest(fs: FabricState, wl: Workload) -> FabricState:
+    """Join new packets to a live run. ``wl.t_inject`` is absolute fabric
+    time (inject slices already elapsed never fire — the caller shifts;
+    :meth:`repro.core.net.OpenOpticsNet.ingest` shifts by its clock).
+    Flow ids are absolute too: reusing an id continues that flow's
+    in-order sequence tracking. Growing the population re-traces the
+    window program (packet count is a static shape)."""
+    P = wl.num_packets
+    if P == 0:
+        return fs
+    dev = lambda a, dt=jnp.int32: jnp.asarray(a, dt)
+    cat = lambda a, b: jnp.concatenate([a, b])
+    fs.j.update(
+        src=cat(fs.j["src"], dev(wl.src)),
+        dst=cat(fs.j["dst"], dev(wl.dst)),
+        size=cat(fs.j["size"], dev(wl.size)),
+        t_inject=cat(fs.j["t_inject"], dev(wl.t_inject)),
+        flow=cat(fs.j["flow"], dev(wl.flow)),
+        seq=cat(fs.j["seq"], dev(wl.seq)),
+        is_eleph=cat(fs.j["is_eleph"], dev(wl.is_eleph, jnp.bool_)),
+    )
+    s = fs.state
+    full = lambda fill, dt=jnp.int32: jnp.full((P,), fill, dt)
+    s.update(
+        loc=cat(s["loc"], full(NOT_INJECTED)),
+        nxt=cat(s["nxt"], full(-1)),
+        dep=cat(s["dep"], full(0)),
+        relook=cat(s["relook"], full(False, jnp.bool_)),
+        nhops=cat(s["nhops"], full(0)),
+        t_del=cat(s["t_del"], full(-1)),
+    )
+    nf = int(max(wl.flow.max() + 1, 1))
+    if nf > fs.num_flows:
+        s["max_seq"] = jnp.concatenate(
+            [s["max_seq"], jnp.full((nf - fs.num_flows,), -1, jnp.int32)])
+        fs.num_flows = nf
+    return fs
+
+
+def step_slices(fs: FabricState, num_slices: int, failures=None,
+                control=None) -> FabricState:
+    """Advance the fabric ``num_slices`` slices (one jitted window scan).
+
+    ``failures`` / ``control`` masks cover **this window only**
+    (``[num_slices, N]``-shaped rows, row 0 = the current clock slice);
+    their presence is a static branch per window, exactly as in
+    :func:`simulate`. The carry state picks up where the last window left
+    off, so a run split across any window boundaries is bit-identical to
+    the one-shot scan (asserted by ``tests/test_telemetry.py``)."""
+    N = fs.num_nodes
+    jw = dict(fs.j)
+    if failures is not None:
+        failures.validate(num_slices, N)
+        jw["link_cap"] = jnp.asarray(failures.link_cap, jnp.float32)
+        jw["node_ok"] = jnp.asarray(failures.node_ok, jnp.bool_)
+    if control is not None:
+        if fs.cfg.lookup_impl != "jnp":
+            raise ValueError(
+                "control-plane masks need lookup_impl='jnp': per-ToR local "
+                f"slices make lookups per-packet in time (got "
+                f"{fs.cfg.lookup_impl!r})")
+        control.validate(num_slices, N)
+        jw["phase_off"] = jnp.asarray(control.phase_off, jnp.int32)
+        jw["skew_miss"] = jnp.asarray(control.skew_miss, jnp.bool_)
+    if failures is not None or control is not None:
+        # window-local mask rows: _make_step re-bases mask lookups only
+        jw["mask_t0"] = jnp.int32(fs.clock)
+    fs.state, ys = _window_jit(jw, fs.state, jnp.int32(fs.clock), fs.cfg,
+                               int(num_slices), fs.per_packet_mp,
+                               fs.num_flows, fs.telemetry)
+    fs.chunks.append({k: np.asarray(v) for k, v in ys.items()})
+    fs.clock += int(num_slices)
+    return fs
+
+
+def finalize(fs: FabricState) -> SimResult:
+    """Close the run: assemble the same :class:`SimResult` the one-shot
+    :func:`simulate` would return for the windows run so far (the state
+    stays live — finalize may be called repeatedly as a checkpoint)."""
+    N = fs.num_nodes
+    stat_keys = ("delivered_bytes", "dropped", "buf_bytes", "offl_bytes",
+                 "blocked_inj", "slice_miss")
+    tele_keys = TELE_KEYS if fs.telemetry is not None else ()
+    if fs.chunks:
+        ys = {k: np.concatenate([c[k] for c in fs.chunks])
+              for k in stat_keys + tele_keys}
+    else:
+        B = fs.telemetry.num_buckets if fs.telemetry is not None else 0
+        empt = {"delivered_bytes": (0,), "dropped": (0,),
+                "buf_bytes": (0, N), "offl_bytes": (0, N),
+                "blocked_inj": (0,), "slice_miss": (0,),
+                "tele_injected": (0, N), "tele_delivered": (0, N),
+                "tele_deferred": (0, N), "tele_dropped": (0, N),
+                "tele_qhwm": (0, N), "tele_util_used": (0, N),
+                "tele_util_cap": (0, N), "tele_lat_hist": (0, B)}
+        ys = {k: np.zeros(empt[k], np.int32) for k in stat_keys + tele_keys}
+    out = dict(
+        t_deliver=np.asarray(fs.state["t_del"]),
+        loc_final=np.asarray(fs.state["loc"]),
+        nhops=np.asarray(fs.state["nhops"]),
+        reorder_cnt=np.asarray(fs.state["reorder"]),
+        **{k: ys[k] for k in stat_keys + tele_keys},
+    )
+    tele = counters_from_out(out, fs.telemetry)
+    return SimResult(**out, telemetry=tele)
+
+
+def simulate_incremental(tables: FabricTables, wl: Workload, cfg: FabricConfig,
+                         num_slices: int, window: int | None = None,
+                         failures=None, control=None,
+                         telemetry: TelemetryConfig | None = None) -> SimResult:
+    """:func:`simulate`, replayed through the incremental API in windows of
+    ``window`` slices (default: one window). Field-for-field identical to
+    the one-shot run — counters included; full-run masks are sliced per
+    window."""
+    fs = init_state(tables, wl, cfg, telemetry)
+    window = num_slices if window is None else int(window)
+    if window <= 0:
+        raise ValueError(f"window must be positive, got {window}")
+    while fs.clock < num_slices:
+        n = min(window, num_slices - fs.clock)
+        t0, t1 = fs.clock, fs.clock + n
+        fw = cw = None
+        if failures is not None:
+            failures.validate(num_slices, len(tables.conn[0]))
+            fw = dataclasses.replace(
+                failures, link_cap=failures.link_cap[t0:t1],
+                node_ok=failures.node_ok[t0:t1])
+        if control is not None:
+            control.validate(num_slices, len(tables.conn[0]))
+            cw = dataclasses.replace(
+                control, skew_ns=control.skew_ns[t0:t1],
+                phase_off=control.phase_off[t0:t1],
+                skew_miss=control.skew_miss[t0:t1],
+                ctrl_delay=control.ctrl_delay[t0:t1],
+                ctrl_ok=control.ctrl_ok[t0:t1])
+        step_slices(fs, n, failures=fw, control=cw)
+    return finalize(fs)

@@ -38,18 +38,34 @@ Networks: Understanding Techniques and Challenges*). Three layers:
    over the survivors — the self-healing measure -> detect -> repair ->
    hot-swap loop, entirely on-device.
 
-3. **Local fast reroute** (:func:`backup_tables` / :func:`fast_reroute`)
-   — precomputed backup next hops so a failure can be patched around
-   *without* a full recompile (the microsecond-scale first response;
-   repair is the clean second response). For every (slice, node) the
-   backup list holds the earliest upcoming circuits to distinct peers;
-   :func:`fast_reroute` drops table slots that ride failed links
-   (compacting survivors so slots stay contiguous) and, where a cell
-   loses all its slots, installs a one-hop detour via the earliest
-   surviving circuit. The patched tables never cross a failed link
-   (statically checkable with
-   :func:`repro.core.toolkit.check_tables` ``link_fail=``), but detours
-   are best-effort — only :func:`repair` restores loop-free delivery.
+3. **Local fast reroute** (:func:`backup_tables` /
+   :func:`backup_tables_dp` / :func:`fast_reroute`) — precomputed backup
+   next hops so a failure can be patched around *without* a full recompile
+   (the microsecond-scale first response; repair is the clean second
+   response). :func:`fast_reroute` drops table slots that ride failed
+   links (compacting survivors so slots stay contiguous) and, where a
+   cell loses all its slots, installs a one-hop detour. Two backup
+   flavours:
+
+   * :func:`backup_tables` — destination-*agnostic* ``[T, N, C]``: the
+     earliest upcoming circuits to distinct peers. Cheap, but the detour
+     ignores where the packet is headed, so under further failures the
+     patched walk can lengthen or loop (only :func:`repair` restores
+     loop-free delivery).
+   * :func:`backup_tables_dp` — destination-*aware* ``[T, N, D, C]`` from
+     the same time-expanded DP the routing compilers run: candidates are
+     ranked by completion cost toward each destination, and
+     :func:`fast_reroute` only installs a detour whose landing cell is
+     *clean* (transitively delivers over surviving table entries) or the
+     destination itself. For the DP-compiled schemes every patched walk
+     then either delivers within ``2 * max_hop + 1`` hops or sticks at an
+     unreachable cell — it never loops, which
+     ``check_tables(link_fail=..., check_walks=True)`` proves and the
+     multi-failure hypothesis sweep in ``tests/test_failures_prop.py``
+     exercises.
+
+   Either way the patched tables never cross a failed link (statically
+   checkable with :func:`repro.core.toolkit.check_tables` ``link_fail=``).
 """
 from __future__ import annotations
 
@@ -72,6 +88,7 @@ __all__ = [
     "surviving_conn",
     "repair",
     "backup_tables",
+    "backup_tables_dp",
     "fast_reroute",
     "simulate_phased",
     "REPAIR_SCHEMES",
@@ -247,6 +264,20 @@ class FailureMasks:
         :func:`repro.core.toolkit.check_tables` consume."""
         return np.asarray(self.link_cap[t] <= 0.0)
 
+    def on_device(self) -> "FailureMasks":
+        """Move the mask tensors onto the default device once, in place,
+        and return ``self``. Idempotent — already-transferred tensors are
+        kept, so callers that run the same masks through several simulate
+        variants (e.g. ``benchmarks/fig_failover.py``) pay the ~``S*N*N``
+        float32 host->device transfer a single time instead of per
+        variant."""
+        import jax.numpy as jnp
+        if not isinstance(self.link_cap, jnp.ndarray):
+            self.link_cap = jnp.asarray(self.link_cap, jnp.float32)
+        if not isinstance(self.node_ok, jnp.ndarray):
+            self.node_ok = jnp.asarray(self.node_ok, jnp.bool_)
+        return self
+
 
 def compile_masks(trace: FailureTrace, sched: Schedule, num_slices: int,
                   t0: int = 0) -> FailureMasks:
@@ -372,6 +403,56 @@ def backup_tables(sched: Schedule, max_cands: int = 8):
     return bk_next, bk_off
 
 
+def backup_tables_dp(sched: Schedule, max_hop: int = 4,
+                     max_cands: int = 8):
+    """Destination-aware backup candidates from the time-expanded DP: for
+    every (slice, node, dst) up to ``max_cands`` detour peers ranked by
+    completion cost toward *that destination* (the same arrival-then-hops
+    metric the DP-compiled schemes optimize, over a doubled cycle so any
+    wait offset in ``[0, 2T)`` prices correctly). Returns
+    ``(bk_next[T, N, D, C], bk_off[T, N, D, C])`` int32 (-1 padding).
+
+    Costs ~``T * N^3`` host work once per deploy; :func:`fast_reroute`
+    detects the extra destination axis and applies its loop-free patching
+    rule (see there). Candidates unreachable toward ``d`` (the DP finds no
+    continuation within the horizon) are not listed at all — a detour that
+    cannot complete is worse than sticking, which the fabric handles.
+    """
+    from .routing import INF, _time_dp_all, first_direct_offsets
+    conn = np.asarray(sched.conn)
+    T, N, U = conn.shape
+    # doubled cycle: a candidate landing as late as t + 2T - 1 still needs
+    # a priced continuation, so the DP horizon must cover 4T slices
+    sched2 = Schedule(np.concatenate([conn, conn], axis=0),
+                      slice_us=sched.slice_us, reconf_us=sched.reconf_us)
+    cost, H = _time_dp_all(sched2, max_hop)              # [H + 1, N, D]
+    B = np.int64((max_hop + H) * (H + 2) + 1)            # _dp_B(sched2, ...)
+    fd = first_direct_offsets(sched).astype(np.int64)    # [T, N, M]
+    C = min(max_cands, N - 1)
+    diag = np.arange(N)
+    eye = np.eye(N, dtype=bool)
+    bk_next = np.full((T, N, N, C), -1, np.int32)
+    bk_off = np.zeros((T, N, N, C), np.int32)
+    for t in range(T):                                   # [N, M, D] per slice
+        offt = fd[t]                                     # [N, M]
+        okm = offt >= 0
+        okm[diag, diag] = False                          # never via self
+        land = t + np.where(okm, offt, 0)                # departure slice
+        # continuing from peer m after landing, toward every destination;
+        # detouring straight to d delivers at the landing slice
+        cont = cost[np.minimum(land + 1, H), diag[None, :], :]   # [N, M, D]
+        val = np.where(eye[None, :, :], (land * B)[:, :, None], cont) + 1
+        val = np.where(okm[:, :, None], val, INF)
+        order = np.argsort(val, axis=1, kind="stable")[:, :C, :]  # [N, C, D]
+        found = np.take_along_axis(val, order, axis=1) < INF
+        offs = np.take_along_axis(
+            np.broadcast_to(np.where(okm, offt, 0)[:, :, None],
+                            val.shape), order, axis=1)
+        bk_next[t] = np.where(found, order, -1).transpose(0, 2, 1)
+        bk_off[t] = np.where(found, offs, 0).transpose(0, 2, 1)
+    return bk_next, bk_off
+
+
 def fast_reroute(routing: CompiledRouting, sched: Schedule,
                  failed: np.ndarray, backups=None) -> CompiledRouting:
     """Patch compiled tables around a failure set without recompiling.
@@ -379,15 +460,33 @@ def fast_reroute(routing: CompiledRouting, sched: Schedule,
     Per table cell (slice, node, dst): slots whose egress rides a failed
     link are dropped and the survivors compacted to the front (slot
     contiguity, which the fabric's hash-over-valid-count requires, is
-    preserved). A cell that loses *all* its slots gets a one-hop detour:
-    the earliest surviving circuit from the node (``backups``, default
-    :func:`backup_tables`), after which the transit tables take over.
+    preserved). A cell that loses *all* its slots gets a one-hop detour
+    from ``backups``, after which the transit tables take over:
 
-    The patched tables never cross a failed link at any hop (provable with
-    ``check_tables(..., link_fail=failed, check_walks=False)``), but
-    detours are best-effort: they can lengthen paths or loop under further
-    failures. :func:`repair` is the full recompile that restores loop-free
-    delivery; fast reroute is the instant first response.
+    * destination-agnostic ``[T, N, C]`` backups (default,
+      :func:`backup_tables`): the earliest surviving circuit from the
+      node. Instant and always applicable, but best-effort — the detour
+      can lengthen paths or loop under further failures.
+    * destination-aware ``[T, N, D, C]`` backups
+      (:func:`backup_tables_dp`): candidates are tried in DP cost order
+      and installed only when the immediate link survives *and* the
+      landing transit cell is **clean** — transitively delivering over
+      surviving (post-drop, pre-detour) table entries, computed here as a
+      greatest fixpoint — or the destination itself. A patched walk is
+      then a surviving-entry prefix, at most one detour hop, and a clean
+      suffix; for the DP-compiled schemes both segments deliver within
+      the scheme's ``max_hop``, so every walk delivers within
+      ``2 * max_hop + 1`` hops or sticks — it never loops
+      (``check_tables(..., link_fail=failed, check_walks=True)`` proves
+      it; the multi-failure sweep lives in
+      ``tests/test_failures_prop.py``). Cells with no clean candidate
+      stay empty: the fabric defers those packets (§5.2), which is safe.
+
+    Either way the patched tables never cross a failed link at any hop
+    (provable with ``check_tables(..., link_fail=failed,
+    check_walks=False)``). :func:`repair` is the full recompile that
+    restores delivery everywhere it is possible; fast reroute is the
+    instant first response.
     """
     T = sched.num_slices
     N = sched.num_nodes
@@ -399,12 +498,13 @@ def fast_reroute(routing: CompiledRouting, sched: Schedule,
     if backups is None:
         backups = backup_tables(sched)
     bk_next, bk_off = backups
-    out_n, out_d = [], []
+    dest_aware = bk_next.ndim == 4
+    node_idx = np.arange(N)[None, :, None, None]
+    dropped = []
     for nxt, dep in ((routing.tf_next, routing.tf_dep),
                      (routing.inj_next, routing.inj_dep)):
         valid = nxt >= 0
         optical = valid & (nxt < N)
-        node_idx = np.arange(N)[None, :, None, None]
         dead = optical & failed[node_idx, np.clip(nxt, 0, N - 1)]
         ok = valid & ~dead
         # compact surviving slots to the front, preserving slot order
@@ -414,16 +514,53 @@ def fast_reroute(routing: CompiledRouting, sched: Schedule,
         ok_s = np.take_along_axis(ok, order, axis=-1)
         new_n = np.where(ok_s, new_n, -1)
         new_d = np.where(ok_s, new_d, 0)
-        # cells that had entries but lost them all: detour via the earliest
-        # surviving circuit (lands at a live peer; transit tables continue)
+        # cells that had entries but lost every slot need a detour
         need = valid.any(-1) & ~ok.any(-1)               # [Tr, N, D]
+        dropped.append((new_n, new_d, need))
+
+    clean = None
+    if dest_aware:
+        # clean[t, n, d]: walking the post-drop (pre-detour) transit
+        # tables from this cell delivers on every slot — greatest
+        # fixpoint of "non-empty and every slot delivers or lands clean".
+        # Detours are only installed into clean landing cells, so no walk
+        # ever chains detours (a detour cell is empty pre-detour, hence
+        # not clean).
+        tf_n, tf_d, _ = dropped[0]
+        Tr = tf_n.shape[0]
+        validk = tf_n >= 0
+        d_ax = np.arange(N)[None, None, :, None]
+        delivers = validk & ((tf_n == d_ax) | (tf_n >= N))
+        land_t = (np.arange(Tr)[:, None, None, None] + tf_d) % Tr
+        land_n = np.clip(tf_n, 0, N - 1)
+        clean = validk.any(-1)
+        while True:
+            ok_slot = ~validk | delivers | clean[land_t, land_n, d_ax]
+            nxt_clean = validk.any(-1) & ok_slot.all(-1)
+            if (nxt_clean == clean).all():
+                break
+            clean = nxt_clean
+
+    out_n, out_d = [], []
+    for new_n, new_d, need in dropped:
         if need.any():
             t_i, n_i, d_i = np.nonzero(need)
-            cn = bk_next[t_i % T, n_i]                   # [M, C]
-            co = bk_off[t_i % T, n_i]
-            alive = (cn >= 0) & ~failed[n_i[:, None], np.clip(cn, 0, N - 1)]
-            pick = np.argmax(alive, axis=1)
-            has = alive.any(axis=1)
+            if dest_aware:
+                cn = bk_next[t_i % T, n_i, d_i]          # [M, C]
+                co = bk_off[t_i % T, n_i, d_i]
+                cnc = np.clip(cn, 0, N - 1)
+                alive = (cn >= 0) & ~failed[n_i[:, None], cnc]
+                # loop-free rule: detour straight to the destination, or
+                # into a clean landing cell (see above)
+                good = alive & ((cn == d_i[:, None]) | clean[
+                    (t_i[:, None] + co) % T, cnc, d_i[:, None]])
+            else:
+                cn = bk_next[t_i % T, n_i]               # [M, C]
+                co = bk_off[t_i % T, n_i]
+                good = (cn >= 0) & ~failed[n_i[:, None],
+                                           np.clip(cn, 0, N - 1)]
+            pick = np.argmax(good, axis=1)
+            has = good.any(axis=1)
             mrow = np.arange(t_i.size)
             new_n[t_i, n_i, d_i, 0] = np.where(has, cn[mrow, pick], -1)
             new_d[t_i, n_i, d_i, 0] = np.where(has, co[mrow, pick], 0)

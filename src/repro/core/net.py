@@ -23,11 +23,14 @@ import dataclasses
 
 import numpy as np
 
+from . import fabric as fabric_mod
 from . import routing as routing_mod
 from .controlplane import ControlTrace, compile_control
-from .fabric import FabricConfig, FabricTables, SimResult, Workload, simulate
+from .fabric import (FabricConfig, FabricState, FabricTables, SimResult,
+                     Workload, simulate)
 from .failures import FailureTrace, compile_masks
 from .routing import CompiledRouting
+from .telemetry import TELE_KEYS, TelemetryConfig
 from .topology import Schedule, deploy_topo_check
 
 __all__ = ["OpenOpticsNet", "clos_routing"]
@@ -56,9 +59,14 @@ class OpenOpticsNet:
         self._last_tm = np.zeros((self.n_nodes, self.n_nodes), dtype=np.float64)
         self._last_result: SimResult | None = None
         self._last_workload: Workload | None = None
-        self._clock = 0  # slices elapsed across run() windows
+        self._clock = 0  # slices elapsed across run() / advance() windows
         self.failure_trace = FailureTrace()
         self.control_trace = ControlTrace()
+        tele = config.get("telemetry", None)
+        if isinstance(tele, dict):
+            tele = TelemetryConfig(**tele)
+        self.telemetry: TelemetryConfig | None = tele
+        self._service: FabricState | None = None
 
     # -- Topology APIs ------------------------------------------------------
     def deploy_topo(self, sched: Schedule) -> bool:
@@ -205,6 +213,111 @@ class OpenOpticsNet:
         self._last_tm = tm
         self._clock += num_slices
         return res
+
+    # -- Clocked service (ISSUE 8: long-lived incremental fabric) -------------
+    def _service_state(self) -> FabricState:
+        if self._service is None:
+            if self.schedule is None or self.routing is None:
+                raise RuntimeError("deploy_topo and deploy_routing first")
+            tables = FabricTables.build(self.schedule, self.routing)
+            self._service = fabric_mod.init_state(
+                tables, None, self.fabric_cfg, self.telemetry)
+            self._service.clock = self._clock
+        return self._service
+
+    def ingest(self, wl: Workload) -> bool:
+        """Join demand to the live fabric (Table-1 service style).
+
+        ``wl.t_inject`` is relative to the net's clock — slice 0 means "the
+        next :meth:`advance` window"; flow ids are offset past every flow
+        ingested so far, so each demand batch tracks its own in-order
+        sequences. Growing the packet population re-traces the window
+        program, so batch ingests beat per-packet ones.
+        """
+        fs = self._service_state()
+        if wl.num_packets == 0:
+            return True
+        wl = dataclasses.replace(
+            wl, t_inject=wl.t_inject + np.int32(self._clock),
+            flow=wl.flow + np.int32(fs.num_flows))
+        fabric_mod.ingest(fs, wl)
+        return True
+
+    def advance(self, num_slices: int) -> bool:
+        """Advance the live fabric ``num_slices`` slices (one jitted window
+        scan). Failure / control traces accumulated via
+        :meth:`inject_failure` / :meth:`inject_control` apply exactly as in
+        :meth:`run` — only windows a fault can touch pay the mask branch.
+        State (packets in flight, queue occupancy, telemetry counters)
+        carries across calls; :meth:`snapshot` reads it without stopping.
+        """
+        fs = self._service_state()
+        n = int(num_slices)
+        if n <= 0:
+            raise ValueError(f"num_slices must be positive, got {num_slices}")
+        masks = ctrl = None
+        if self.failure_trace.active_in(self._clock, self._clock + n):
+            masks = compile_masks(self.failure_trace, self.schedule, n,
+                                  t0=self._clock)
+        if self.control_trace.active_in(self._clock, self._clock + n):
+            ctrl = compile_control(
+                self.control_trace, n, self.n_nodes,
+                slice_ns=self.slice_us * 1000.0, t0=self._clock)
+        fabric_mod.step_slices(fs, n, failures=masks, control=ctrl)
+        self._clock = fs.clock
+        return True
+
+    def snapshot(self) -> dict:
+        """Host-side structured telemetry frame of the live fabric, without
+        stopping it: the service clock, packet/byte population broken down
+        by lifecycle stage, and (when the net was built with a
+        ``telemetry=`` config) cumulative per-ToR counters plus the
+        delivery-latency histogram. ``in_flight`` includes electrical
+        deliveries still in transit past the clock; ``pending`` packets
+        have not injected yet."""
+        fs = self._service
+        frame = {"clock": self._clock,
+                 "packets": {}, "bytes": {}, "counters": None}
+        if fs is None:
+            zero = dict(total=0, pending=0, in_flight=0, delivered=0,
+                        dropped=0)
+            frame["packets"] = dict(zero)
+            frame["bytes"] = dict(zero)
+            return frame
+        loc = np.asarray(fs.state["loc"])
+        t_del = np.asarray(fs.state["t_del"])
+        size = np.asarray(fs.j["size"]).astype(np.int64)
+        NI, DL, DR = (fabric_mod.NOT_INJECTED, fabric_mod.DELIVERED,
+                      fabric_mod.DROPPED)
+        groups = dict(
+            pending=loc == NI,
+            in_flight=(loc >= 0) | ((loc == DL) & (t_del >= fs.clock)),
+            delivered=(loc == DL) & (t_del < fs.clock),
+            dropped=loc == DR)
+        frame["packets"] = {"total": int(loc.size)} | {
+            k: int(m.sum()) for k, m in groups.items()}
+        frame["bytes"] = {"total": int(size.sum())} | {
+            k: int(size[m].sum()) for k, m in groups.items()}
+        if fs.telemetry is not None and fs.chunks:
+            rows = {k: np.concatenate([c[k] for c in fs.chunks])
+                    for k in TELE_KEYS}
+            frame["counters"] = {
+                "injected_bytes": rows["tele_injected"].sum(0),
+                "delivered_bytes": rows["tele_delivered"].sum(0),
+                "deferred_bytes": rows["tele_deferred"].sum(0),
+                "dropped_bytes": rows["tele_dropped"].sum(0),
+                "queue_hwm": rows["tele_qhwm"].max(0),
+                "util_used": rows["tele_util_used"].sum(0),
+                "util_cap": rows["tele_util_cap"].sum(0),
+                "lat_hist": rows["tele_lat_hist"].sum(0),
+                "lat_edges": fs.telemetry.lat_edges,
+            }
+        return frame
+
+    def service_result(self) -> SimResult:
+        """Checkpoint the live fabric as a :class:`SimResult` (the service
+        keeps running; :func:`repro.core.fabric.finalize` semantics)."""
+        return fabric_mod.finalize(self._service_state())
 
     def run_ta(self, windows: list[Workload], window_slices: int,
                topo_fn, routing_fn) -> list[SimResult]:

@@ -73,8 +73,11 @@ import jax
 import jax.numpy as jnp
 
 from . import routing_jnp, topology_jnp
-from .fabric import DROPPED, FabricConfig, Workload, _init_state, _make_step
+from .fabric import (DROPPED, FabricConfig, Workload, _check_impls,
+                     _init_state, _make_step, _tele_delivery_rows)
 from .failures import surviving_conn
+from .telemetry import (TELE_KEYS, TelemetryConfig, TelemetryCounters,
+                        counters_from_out)
 from .topology import Schedule
 
 __all__ = ["ReconfigConfig", "ReconfigResult", "reconfigure",
@@ -181,11 +184,14 @@ class ReconfigResult:
     install_retries: np.ndarray  # [num_epochs] 2PC re-sends used
     degraded: np.ndarray         # [num_epochs] bool: epoch fell back to the
                                  # schedule-oblivious safe tables
+    # per-ToR per-slice counter frames (concatenated across epochs, aligned
+    # with delivered_bytes) when run with telemetry=; None otherwise
+    telemetry: "TelemetryCounters | None" = None
 
 
 def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
-                rcfg: ReconfigConfig, failures=None,
-                control=None) -> ReconfigResult:
+                rcfg: ReconfigConfig, failures=None, control=None,
+                telemetry: TelemetryConfig | None = None) -> ReconfigResult:
     """Run the traffic-aware reconfiguration loop (see module docstring).
 
     ``sched`` is the *base* cycle ([T0, N, U]). With
@@ -216,11 +222,26 @@ def reconfigure(sched: Schedule, wl: Workload, cfg: FabricConfig,
     are simulated, not assumed away. With an all-zero trace every install
     lands at the epoch's first slice and the results are bit-identical to
     the atomic-swap program (pinned by ``tests/test_controlplane.py``).
+
+    ``telemetry`` (a :class:`repro.core.telemetry.TelemetryConfig`) threads
+    the per-ToR per-slice counters through every epoch's fabric steps —
+    they come back concatenated across epochs as
+    ``ReconfigResult.telemetry``, aligned with ``delivered_bytes``. As in
+    :func:`repro.core.fabric.simulate`, ``None`` traces exactly the
+    pre-telemetry program.
+
+    ``cfg.lookup_impl`` selects the table-lookup backend inside the epoch
+    scan ("jnp" gathers or the Pallas kernel — it runs on the freshly
+    recompiled tables from the epoch carry unchanged). Control-plane masks
+    force ``"jnp"``: per-ToR local slices and version selection make the
+    lookup per-packet in time.
     """
     _validate(cfg, rcfg)
     j, T0, num_flows = _build_j(sched, wl, cfg, rcfg, failures, control)
-    out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows)
-    return ReconfigResult(**{k: np.asarray(v) for k, v in out.items()})
+    out = _reconfigure_jit(j, cfg, rcfg, T0, num_flows, telemetry)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    tele = counters_from_out(out, telemetry)
+    return ReconfigResult(**out, telemetry=tele)
 
 
 def _validate(cfg: FabricConfig, rcfg: ReconfigConfig) -> None:
@@ -230,12 +251,11 @@ def _validate(cfg: FabricConfig, rcfg: ReconfigConfig) -> None:
     if rcfg.scheduler not in topology_jnp.SCHEDULERS:
         raise ValueError(f"unknown scheduler {rcfg.scheduler!r}: expected "
                          f"one of {topology_jnp.SCHEDULERS}")
-    if cfg.lookup_impl != "jnp":
-        raise ValueError("reconfigure() supports lookup_impl='jnp' only "
-                         "(the Pallas lookup kernel is a per-deploy path)")
-    if cfg.admit_impl not in ("xla", "pallas", "pallas-interpret"):
-        raise ValueError(f"unknown admit_impl {cfg.admit_impl!r}: expected "
-                         "'xla', 'pallas', or 'pallas-interpret'")
+    # any fabric lookup/admission backend runs inside the epoch scan (the
+    # Pallas kernels take the recompiled tables from the carry like any
+    # other input); control-plane masks add the lookup_impl='jnp'
+    # constraint in _build_j, exactly as simulate does
+    _check_impls(cfg)
     if rcfg.install not in ("hotswap", "2pc"):
         raise ValueError(f"unknown install protocol {rcfg.install!r}: "
                          "expected 'hotswap' or '2pc'")
@@ -280,6 +300,11 @@ def _build_j(sched: Schedule, wl: Workload, cfg: FabricConfig,
         j["link_cap"] = dev(failures.link_cap, jnp.float32)
         j["node_ok"] = dev(failures.node_ok, jnp.bool_)
     if control is not None:
+        if cfg.lookup_impl != "jnp":
+            raise ValueError(
+                "control-plane masks need lookup_impl='jnp': per-ToR local "
+                "slices and version selection make lookups per-packet in "
+                f"time (got {cfg.lookup_impl!r})")
         control.validate(rcfg.num_epochs * rcfg.epoch_slices, N)
         if rcfg.install_timeout > rcfg.epoch_slices:
             raise ValueError(
@@ -295,8 +320,9 @@ def _build_j(sched: Schedule, wl: Workload, cfg: FabricConfig,
 
 
 def reconfigure_fleet(sched: Schedule, wls, cfg: FabricConfig,
-                      rcfg: ReconfigConfig, failures=None,
-                      control=None) -> list[ReconfigResult]:
+                      rcfg: ReconfigConfig, failures=None, control=None,
+                      telemetry: TelemetryConfig | None = None
+                      ) -> list[ReconfigResult]:
     """Run a sweep of reconfiguration scenarios as **one** batched XLA
     program: :func:`reconfigure` vmapped over a scenario axis (traffic
     seeds x failure traces x control traces), bit-identical per scenario
@@ -332,27 +358,34 @@ def reconfigure_fleet(sched: Schedule, wls, cfg: FabricConfig,
         js.append((j, T0, nf))
     num_flows = max(nf for _, _, nf in js)
     jb = {k: jnp.stack([j[k] for j, _, _ in js]) for k in js[0][0]}
-    out = _reconfigure_fleet_jit(jb, cfg, rcfg, js[0][1], num_flows)
+    out = _reconfigure_fleet_jit(jb, cfg, rcfg, js[0][1], num_flows,
+                                 telemetry)
     out = {k: np.asarray(v) for k, v in out.items()}
-    return [ReconfigResult(**{k: v[i] for k, v in out.items()})
+    teles = [counters_from_out(out, telemetry, index=i) for i in range(B)]
+    for k in TELE_KEYS:
+        out.pop(k, None)
+    return [ReconfigResult(**{k: v[i] for k, v in out.items()},
+                           telemetry=teles[i])
             for i in range(B)]
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
 def _reconfigure_fleet_jit(jb, cfg: FabricConfig, rcfg: ReconfigConfig,
-                           T0: int, num_flows: int):
+                           T0: int, num_flows: int,
+                           telemetry: TelemetryConfig | None = None):
     return jax.vmap(
-        lambda j: _reconfig_body(j, cfg, rcfg, T0, num_flows))(jb)
+        lambda j: _reconfig_body(j, cfg, rcfg, T0, num_flows, telemetry))(jb)
 
 
-@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4, 5))
 def _reconfigure_jit(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
-                     num_flows: int):
-    return _reconfig_body(j, cfg, rcfg, T0, num_flows)
+                     num_flows: int,
+                     telemetry: TelemetryConfig | None = None):
+    return _reconfig_body(j, cfg, rcfg, T0, num_flows, telemetry)
 
 
 def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
-                   num_flows: int):
+                   num_flows: int, telemetry: TelemetryConfig | None = None):
     Tf, N, U = j["conn"].shape               # Tf = T0 + k_hot
     E = rcfg.epoch_slices
     K = rcfg.k_hot
@@ -449,7 +482,8 @@ def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
             jj = dict(j, conn=conn_e, tf_next=tf_n, tf_dep=tf_d,
                       inj_next=inj_n, inj_dep=inj_d,
                       first_direct=routing_jnp.first_direct_offsets(conn_e))
-            step = _make_step(jj, cfg, True, num_flows)
+            step = _make_step(jj, cfg, True, num_flows,
+                              telemetry=telemetry)
             state, ys = jax.lax.scan(step, state, tis)
             install_ver = jnp.full((N,), e, jnp.int32)
             install_lat = jnp.zeros((), jnp.int32)
@@ -519,7 +553,8 @@ def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
                       inj_dep_v=jnp.stack(inj_dv),
                       vsel=vsel, vsel_t0=t0,
                       first_direct=routing_jnp.first_direct_offsets(conn_e))
-            step = _make_step(jj, cfg, True, num_flows)
+            step = _make_step(jj, cfg, True, num_flows,
+                              telemetry=telemetry)
             state, ys = jax.lax.scan(step, state, tis)
 
             # 4c. ToRs that switched inside the epoch now *own* this
@@ -541,7 +576,7 @@ def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
                   install_retries=retries_used, degraded=degraded)
         return out_carry, ys
 
-    state0 = _init_state(j, num_flows)
+    state0 = _init_state(j, num_flows, telemetry)
     if has_ctrl:
         carry0 = (state0,
                   dict(tfn=boot[0], tfd=boot[1], injn=boot[2], injd=boot[3]),
@@ -554,7 +589,7 @@ def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
     final = final_carry[0] if has_ctrl else final_carry
     S = rcfg.num_epochs * E
     flat = lambda a: a.reshape((S,) + a.shape[2:])
-    return dict(
+    out = dict(
         t_deliver=final["t_del"], loc_final=final["loc"],
         nhops=final["nhops"],
         delivered_bytes=flat(ys["delivered_bytes"]),
@@ -570,3 +605,14 @@ def _reconfig_body(j, cfg: FabricConfig, rcfg: ReconfigConfig, T0: int,
         install_ver=ys["install_ver"], install_lat=ys["install_lat"],
         install_retries=ys["install_retries"], degraded=ys["degraded"],
     )
+    if telemetry is not None:
+        for k in TELE_KEYS:
+            if k in ys:
+                out[k] = flat(ys[k])
+        # delivery-derived rows reconstructed once from the terminal packet
+        # state over the whole run (see fabric._tele_delivery_rows); epoch
+        # boundaries don't matter — t_del is absolute slice time
+        rows, hist = _tele_delivery_rows(final, j, telemetry, S)
+        out["tele_delivered"] = rows
+        out["tele_lat_hist"] = hist
+    return out

@@ -1,0 +1,127 @@
+"""Fabric telemetry: per-ToR per-slice counters threaded through the jitted
+data-plane scan (ISSUE 8).
+
+The paper pitches the backend as "rich infrastructure services for diverse
+applications"; a service needs observability. This module is the counter
+layer for :func:`repro.core.fabric.simulate` and friends: a static
+:class:`TelemetryConfig` switches the fabric step into counting mode, the
+per-slice rows ride the scan's stacked outputs, and the host-side
+:class:`TelemetryCounters` container is what ``SimResult.telemetry`` /
+``ReconfigResult.telemetry`` carry.
+
+Design rules (the ``failures=`` / ``control=`` presence pattern):
+
+* ``telemetry=None`` (the default everywhere) traces **exactly** the
+  pre-telemetry program — every counter branch folds away at trace time, so
+  zero-telemetry runs stay bit-identical to the goldens.
+* With telemetry on, the counters accumulate in the scan carry through the
+  same masked scatter-add primitive (``upd_add``) as the occupancy map, so
+  they are psum-reconciled under the sharded fabric and ride the scenario
+  axis under ``vmap`` unchanged — sharded / vmapped runs produce the same
+  counter rows as the single-device loop, bit for bit.
+* All counters are ``int32`` bytes (or packet counts for the latency
+  histogram), matching the fabric's native accounting; conservation
+  (injected == delivered + in-flight + dropped, per ToR and globally) is
+  checkable host-side with :func:`repro.core.toolkit.check_telemetry`.
+
+Counter semantics (shapes ``[S, N]`` unless noted):
+
+* ``injected_bytes``   — bytes entering the fabric per *source* ToR.
+* ``delivered_bytes``  — bytes delivered per *destination* ToR (electrical
+  deliveries land in their arrival slice ``t + 1``, same convention as
+  ``SimResult.delivered_bytes``; an electrical delivery in the final slice
+  arrives after the run and is counted in no row — the conservation checker
+  treats it as in-flight).
+* ``deferred_bytes``   — bytes deferred by congestion detection (full
+  calendar queue at enqueue, or a missed slice) per holding switch; a
+  packet deferred repeatedly counts once per deferral.
+* ``dropped_bytes``    — bytes dropped by buffer overflow per dropping
+  switch.
+* ``queue_hwm``        — per-switch high-water mark of switch-resident
+  calendar-queue bytes within the slice (max over the hop chain).
+* ``util_used`` / ``util_cap`` — optical bytes transmitted vs. optical
+  capacity granted per source ToR per slice (the circuit-utilization pair;
+  the electrical egress column is excluded).
+* ``lat_hist`` ``[S, B]`` — histogram of delivery latency in slices
+  (``t_deliver - t_inject``) for the packets delivered each slice, bucketed
+  by the static ``TelemetryConfig.lat_edges`` (``B = len(lat_edges) + 1``;
+  bucket ``i`` counts latencies in ``(edges[i-1], edges[i]]``, the last
+  bucket is overflow).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["TelemetryConfig", "TelemetryCounters", "TELE_KEYS",
+           "counters_from_out"]
+
+# the tele_* keys the fabric step emits per slice, in container field order
+TELE_KEYS = ("tele_injected", "tele_delivered", "tele_deferred",
+             "tele_dropped", "tele_qhwm", "tele_util_used", "tele_util_cap",
+             "tele_lat_hist")
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static telemetry parameters (hashable; a jit static argument like
+    :class:`repro.core.fabric.FabricConfig`).
+
+    lat_edges: static latency-histogram bucket edges, in slices. The
+        histogram has ``len(lat_edges) + 1`` buckets; the last is overflow.
+    """
+
+    lat_edges: tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+    def __post_init__(self):
+        edges = tuple(int(e) for e in self.lat_edges)
+        if not edges or list(edges) != sorted(set(edges)) or edges[0] < 0:
+            raise ValueError(
+                f"lat_edges must be non-empty, strictly increasing and "
+                f"non-negative, got {self.lat_edges!r}")
+        object.__setattr__(self, "lat_edges", edges)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.lat_edges) + 1
+
+
+@dataclasses.dataclass
+class TelemetryCounters:
+    """Host-side per-slice counter frames (see module docstring for the
+    field semantics). ``S`` is the simulated slice count, ``N`` the ToR
+    count, ``B = len(lat_edges) + 1``."""
+
+    injected_bytes: np.ndarray   # [S, N] per source ToR
+    delivered_bytes: np.ndarray  # [S, N] per destination ToR
+    deferred_bytes: np.ndarray   # [S, N] per holding switch
+    dropped_bytes: np.ndarray    # [S, N] per dropping switch
+    queue_hwm: np.ndarray        # [S, N] switch-resident high-water, bytes
+    util_used: np.ndarray        # [S, N] optical bytes sent per source ToR
+    util_cap: np.ndarray         # [S, N] optical capacity granted
+    lat_hist: np.ndarray         # [S, B] delivery-latency histogram
+    lat_edges: tuple[int, ...]
+
+    @property
+    def num_slices(self) -> int:
+        return int(self.injected_bytes.shape[0])
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.injected_bytes.shape[1])
+
+
+def counters_from_out(out: dict, telemetry: TelemetryConfig | None,
+                      index=None) -> TelemetryCounters | None:
+    """Build the host container from a jit output dict, popping the
+    ``tele_*`` rows (callers then build their result dataclass from the
+    remaining keys). ``index`` selects one scenario of a batched fleet
+    output without popping (the caller pops once at the end)."""
+    if telemetry is None:
+        return None
+    if index is None:
+        rows = [np.asarray(out.pop(k)) for k in TELE_KEYS]
+    else:
+        rows = [np.asarray(out[k][index]) for k in TELE_KEYS]
+    return TelemetryCounters(*rows, lat_edges=telemetry.lat_edges)

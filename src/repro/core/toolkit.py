@@ -16,7 +16,7 @@ from .routing import CompiledRouting
 from .topology import Schedule
 
 __all__ = ["trace_packet", "format_schedule", "check_tables",
-           "check_tables_mixed", "check_sharding"]
+           "check_tables_mixed", "check_sharding", "check_telemetry"]
 
 
 def trace_packet(sched: Schedule, routing: CompiledRouting, src: int,
@@ -364,6 +364,126 @@ def check_sharding(res, debug: dict, wl, num_slices: int) -> list[str]:
     if n_drop != int(np.sum(loc == DROPPED)):
         bad.append(f"final drop counter {n_drop} != "
                    f"{int(np.sum(loc == DROPPED))} packets at DROPPED")
+    return bad
+
+
+def check_telemetry(res, wl, num_slices: int) -> list[str]:
+    """Telemetry conservation checker for the ``telemetry=`` counter layer
+    (``check_tables``-style: returns human-readable violation messages,
+    empty = sound). Proves the device-accumulated counters against a host
+    replay of the terminal packet state, per ToR and globally.
+
+    Args:
+        res: a :class:`~repro.core.fabric.SimResult` (or
+            :class:`~repro.core.reconfigure.ReconfigResult`) with
+            ``res.telemetry`` set.
+        wl: the simulated :class:`~repro.core.fabric.Workload`, or ``None``
+            for the workload-free subset (delivered-row cross-check against
+            ``res.delivered_bytes``, utilization and high-water bounds).
+        num_slices: slices simulated (``S``; counter rows per slice).
+
+    Checks (counter semantics in :mod:`repro.core.telemetry`):
+
+    * shapes ``[S, N]`` / ``[S, B]`` and non-negativity everywhere;
+    * per slice, ``delivered_bytes`` rows sum to ``res.delivered_bytes``;
+    * ``util_used <= util_cap`` (a circuit never carries beyond its grant)
+      and ``queue_hwm >= res.buf_bytes`` (end-of-slice residency never
+      exceeds the intra-slice high-water mark);
+    * with ``wl``: exact host replay of ``delivered_bytes[t, d]`` from
+      ``(dst, size, t_deliver)``, of the latency histogram from
+      ``t_deliver - t_inject``, of total injected bytes per source ToR,
+      of total dropped bytes, and byte conservation per source ToR —
+      injected == delivered + in-flight + dropped, where in-flight covers
+      packets on a switch and electrical deliveries landing past the run.
+    """
+    from .fabric import DELIVERED, DROPPED, NOT_INJECTED
+    bad: list[str] = []
+    tele = res.telemetry
+    if tele is None:
+        return ["res.telemetry is None (simulate with telemetry=...)"]
+    S = int(num_slices)
+    N = tele.num_nodes
+    B = len(tele.lat_edges) + 1
+    fields = ("injected_bytes", "delivered_bytes", "deferred_bytes",
+              "dropped_bytes", "queue_hwm", "util_used", "util_cap")
+    for f in fields:
+        a = np.asarray(getattr(tele, f))
+        if a.shape != (S, N):
+            bad.append(f"telemetry.{f} shaped {a.shape}, expected ({S}, {N})")
+        elif (a < 0).any():
+            t, n = [int(x[0]) for x in np.nonzero(a < 0)]
+            bad.append(f"telemetry.{f}[{t}, {n}] = {a[t, n]} negative")
+    hist = np.asarray(tele.lat_hist)
+    if hist.shape != (S, B):
+        bad.append(f"telemetry.lat_hist shaped {hist.shape}, "
+                   f"expected ({S}, {B})")
+    if bad:
+        return bad
+
+    dlv = np.asarray(tele.delivered_bytes)
+    rows = dlv.sum(axis=1)
+    ref = np.asarray(res.delivered_bytes)
+    for t in np.nonzero(rows != ref)[0][:8]:
+        bad.append(f"slice {t}: delivered_bytes row sums to {rows[t]}, "
+                   f"SimResult.delivered_bytes says {ref[t]}")
+    over = np.asarray(tele.util_used) > np.asarray(tele.util_cap)
+    for t, n in zip(*[x[:8] for x in np.nonzero(over)]):
+        bad.append(f"slice {t} ToR {n}: util_used "
+                   f"{tele.util_used[t, n]} > granted {tele.util_cap[t, n]}")
+    buf = np.asarray(res.buf_bytes)
+    low = np.asarray(tele.queue_hwm) < buf
+    for t, n in zip(*[x[:8] for x in np.nonzero(low)]):
+        bad.append(f"slice {t} switch {n}: queue_hwm {tele.queue_hwm[t, n]} "
+                   f"below end-of-slice residency {buf[t, n]}")
+    if wl is None:
+        return bad
+
+    src = np.asarray(wl.src)
+    dst = np.asarray(wl.dst)
+    size = np.asarray(wl.size).astype(np.int64)
+    t_inj = np.asarray(wl.t_inject)
+    loc = np.asarray(res.loc_final)
+    t_del = np.asarray(res.t_deliver)
+    # delivered rows, exact replay: bytes land at their delivery slice
+    in_run = (t_del >= 0) & (t_del < S)
+    want_dlv = np.zeros((S, N), np.int64)
+    np.add.at(want_dlv, (t_del[in_run], dst[in_run]), size[in_run])
+    for t, d in zip(*[x[:8] for x in np.nonzero(want_dlv != dlv)]):
+        bad.append(f"slice {t} dst {d}: delivered_bytes {dlv[t, d]}, host "
+                   f"replay says {want_dlv[t, d]}")
+    # latency histogram, exact replay (bucket i: lat in (edges[i-1], edges[i]])
+    lat = np.maximum(t_del[in_run] - t_inj[in_run], 0)
+    bidx = np.searchsorted(np.asarray(tele.lat_edges), lat, side="left")
+    want_hist = np.zeros((S, B), np.int64)
+    np.add.at(want_hist, (t_del[in_run], bidx), 1)
+    for t, b in zip(*[x[:8] for x in np.nonzero(want_hist != hist)]):
+        bad.append(f"slice {t} bucket {b}: lat_hist {hist[t, b]}, host "
+                   f"replay says {want_hist[t, b]}")
+    # totals and conservation per source ToR: every injected byte is
+    # delivered, dropped, or still in flight (incl. electrical deliveries
+    # landing past the run)
+    injected = loc != NOT_INJECTED
+    dropped = loc == DROPPED
+    flight = injected & ~dropped & ~(in_run & (loc == DELIVERED))
+    inj_tot = np.asarray(tele.injected_bytes).sum(axis=0, dtype=np.int64)
+    want_inj = np.bincount(src[injected], weights=size[injected],
+                           minlength=N).astype(np.int64)
+    for n in np.nonzero(inj_tot != want_inj)[0][:8]:
+        bad.append(f"ToR {n}: injected_bytes total {inj_tot[n]}, terminal "
+                   f"state says {want_inj[n]} bytes entered")
+    got_drop = int(np.asarray(tele.dropped_bytes).sum())
+    want_drop = int(size[dropped].sum())
+    if got_drop != want_drop:
+        bad.append(f"dropped_bytes total {got_drop}, dropped packets carry "
+                   f"{want_drop} bytes")
+    per_src = np.zeros((3, N), np.int64)
+    for i, m in enumerate((in_run & (loc == DELIVERED), dropped, flight)):
+        per_src[i] = np.bincount(src[m], weights=size[m], minlength=N)
+    gap = want_inj - per_src.sum(axis=0)
+    for n in np.nonzero(gap)[0][:8]:
+        bad.append(f"ToR {n}: conservation gap {gap[n]} bytes (injected "
+                   f"{want_inj[n]} != delivered {per_src[0, n]} + dropped "
+                   f"{per_src[1, n]} + in-flight {per_src[2, n]})")
     return bad
 
 

@@ -33,9 +33,9 @@ if importlib.util.find_spec("hypothesis") is None:
             "hypothesis is not installed but CI=1: the property-based "
             "suites (test_admission_prop, test_controlplane_prop, "
             "test_failures_prop, test_invariants_prop, test_routing, "
-            "test_sharded_prop, test_topology, test_kernels, "
-            "test_distributed, test_optim) would be silently skipped. "
-            "Install hypothesis in the CI environment.")
+            "test_sharded_prop, test_telemetry_prop, test_topology, "
+            "test_kernels, test_distributed, test_optim) would be silently "
+            "skipped. Install hypothesis in the CI environment.")
     collect_ignore = [
         "test_admission_prop.py",
         "test_controlplane_prop.py",
@@ -46,6 +46,7 @@ if importlib.util.find_spec("hypothesis") is None:
         "test_optim.py",
         "test_routing.py",
         "test_sharded_prop.py",
+        "test_telemetry_prop.py",
         "test_topology.py",
     ]
 

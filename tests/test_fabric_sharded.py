@@ -117,6 +117,37 @@ def test_pallas_backends_under_shard_map(impls, eight_devices):
     _diff(_tables(hoho), _workload(), cfg, 4)
 
 
+def test_telemetry_parity_sharded(eight_devices):
+    """Telemetry counter rows are psum-reconciled inside the sharded step:
+    with telemetry on, every counter frame equals the single-device run bit
+    for bit, the non-telemetry fields stay untouched, and conservation
+    holds on the sharded result (ISSUE 8)."""
+    from repro.core import TelemetryConfig
+    sched = round_robin(N, 1)
+    tables = FabricTables.build(sched, ucmp(sched))
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    fails, ctrl = _masks(sched)
+    tele = TelemetryConfig()
+    wl = _workload()
+    ref = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl,
+                   telemetry=tele)
+    got = simulate_sharded(tables, wl, cfg, SLICES, num_shards=8,
+                           failures=fails, control=ctrl, telemetry=tele)
+    for f in dataclasses.fields(ref):
+        if f.name == "telemetry":
+            continue
+        np.testing.assert_array_equal(getattr(got, f.name),
+                                      getattr(ref, f.name), err_msg=f.name)
+    for f in dataclasses.fields(ref.telemetry):
+        if f.name == "lat_edges":
+            assert got.telemetry.lat_edges == ref.telemetry.lat_edges
+            continue
+        np.testing.assert_array_equal(
+            getattr(got.telemetry, f.name), getattr(ref.telemetry, f.name),
+            err_msg=f"telemetry.{f.name}")
+    assert toolkit.check_telemetry(got, wl, SLICES) == []
+
+
 def test_ownership_debug_fields(eight_devices):
     """with_debug exposes the partition: owners are the contiguous-block
     map, and every admitting shard is the owner (the checker's core

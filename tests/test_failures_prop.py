@@ -74,8 +74,8 @@ def test_repair_golden_numpy_vs_jnp(scheme, seed, n, T, p):
        n=st.integers(4, 9), p=st.floats(0.05, 0.5))
 def test_fast_reroute_statically_sound(scheme, seed, n, p):
     """Patched tables never reference a failed link and keep slot
-    contiguity, for every scheme (walks excluded: detours are
-    best-effort)."""
+    contiguity, for every scheme (walks excluded: the destination-agnostic
+    default detours are best-effort)."""
     from invariant_cases import SCHEME_BY_NAME
     T = 1 if scheme in TA_NAMES else 3
     sched = random_schedule(seed, n, T, 2)
@@ -84,3 +84,27 @@ def test_fast_reroute_statically_sound(scheme, seed, n, p):
     patched = fast_reroute(alg(sched), sched, failed)
     assert toolkit.check_tables(sched, patched, link_fail=failed,
                                 check_walks=False) == []
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheme=st.sampled_from(["ucmp", "hoho"]), seed=st.integers(0, 2**16),
+       n=st.integers(4, 9), T=st.integers(2, 5), U=st.integers(1, 2),
+       p=st.floats(0.05, 0.4))
+def test_fast_reroute_dp_backups_loop_free(scheme, seed, n, T, U, p):
+    """ISSUE 8 satellite: with destination-aware DP backups, fast reroute
+    is loop-free for the DP schemes under *multi*-failure sets — the full
+    walk sweep of check_tables (which flags never-resolving walks) holds,
+    not just the static half. A patched walk is a surviving-prefix, at
+    most one detour into a clean landing cell, and a clean suffix; both
+    segments are DP-progressing, so every walk delivers within
+    2*max_hop + 1 hops or parks."""
+    from invariant_cases import SCHEME_BY_NAME
+    from repro.core import backup_tables_dp
+    sched = random_schedule(seed, n, T, U)
+    failed = _random_failed(seed ^ 0xD00F, n, p)
+    alg, hashes = SCHEME_BY_NAME[scheme]
+    patched = fast_reroute(alg(sched), sched, failed,
+                           backups=backup_tables_dp(sched))
+    assert toolkit.check_tables(sched, patched, link_fail=failed,
+                                hashes=hashes, max_hops=16,
+                                check_walks=True) == []

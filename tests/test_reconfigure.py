@@ -181,8 +181,40 @@ def test_rejects_bad_config():
         reconfigure(sched, wl, FabricConfig(),
                     ReconfigConfig(scheduler="sorn"))
     with pytest.raises(ValueError, match="lookup_impl"):
-        reconfigure(sched, wl, FabricConfig(lookup_impl="pallas-interpret"),
+        reconfigure(sched, wl, FabricConfig(lookup_impl="bogus"),
                     ReconfigConfig())
+    # Pallas lookups are fine without control masks (ISSUE 8 fix) but the
+    # versioned per-ToR install machinery still forces the jnp path
+    from repro.core import compile_control, random_control_trace
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=2, k_hot=0)
+    ctrl = compile_control(random_control_trace(0, N_TORS, 32), 32, N_TORS)
+    with pytest.raises(ValueError, match="lookup_impl"):
+        reconfigure(sched, wl, FabricConfig(lookup_impl="pallas-interpret"),
+                    rcfg, control=ctrl)
+
+
+@pytest.mark.parametrize("impls", [
+    dict(lookup_impl="pallas-interpret"),
+    dict(admit_impl="pallas-interpret"),
+    dict(lookup_impl="pallas-interpret", admit_impl="pallas-interpret"),
+], ids=["pallas-lookup", "pallas-admit", "pallas-both"])
+def test_pallas_backends_bit_identical(impls):
+    """The Pallas lookup/admission backends plumb through the epoch scan
+    (ISSUE 8 satellite: reconfigure used to reject any lookup_impl other
+    than "jnp"): every ReconfigResult field matches the jnp/xla run bit
+    for bit, including the per-epoch history arrays."""
+    import dataclasses
+    sched = round_robin(N_TORS, 1)
+    wl = _workload()
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=3, k_hot=2,
+                          scheme="hoho")
+    ref = reconfigure(sched, wl, FabricConfig(slice_bytes=SLICE_BYTES,
+                                              cc_detect=True), rcfg)
+    got = reconfigure(sched, wl, FabricConfig(slice_bytes=SLICE_BYTES,
+                                              cc_detect=True, **impls), rcfg)
+    for f in dataclasses.fields(ref):
+        np.testing.assert_array_equal(getattr(got, f.name),
+                                      getattr(ref, f.name), err_msg=f.name)
 
 
 # ---------------------------------------------------------------------------

@@ -10,10 +10,10 @@ import numpy as np
 import pytest
 
 from repro.core import (FabricConfig, FabricTables, ReconfigConfig,
-                        round_robin, simulate, simulate_fleet, reconfigure,
-                        reconfigure_fleet, synthesize, ucmp, hoho,
+                        TelemetryConfig, round_robin, simulate, simulate_fleet,
+                        reconfigure, reconfigure_fleet, synthesize, ucmp, hoho,
                         random_trace, compile_masks, random_control_trace,
-                        compile_control)
+                        compile_control, toolkit)
 
 N = 8
 SLICES = 48
@@ -26,8 +26,23 @@ def _wl(seed):
 
 def _assert_results_equal(a, b, where=""):
     for f in dataclasses.fields(a):
+        if f.name == "telemetry":
+            _assert_tele_equal(getattr(a, f.name), getattr(b, f.name), where)
+            continue
         np.testing.assert_array_equal(getattr(a, f.name), getattr(b, f.name),
                                       err_msg=f"{where}{f.name}")
+
+
+def _assert_tele_equal(a, b, where=""):
+    assert (a is None) == (b is None), f"{where}telemetry presence"
+    if a is None:
+        return
+    assert a.lat_edges == b.lat_edges
+    for f in dataclasses.fields(a):
+        if f.name == "lat_edges":
+            continue
+        np.testing.assert_array_equal(getattr(a, f.name), getattr(b, f.name),
+                                      err_msg=f"{where}telemetry.{f.name}")
 
 
 def test_fleet_seed_sweep_bit_identical():
@@ -88,6 +103,26 @@ def test_fleet_rejects_mixed_mask_presence():
     with pytest.raises((ValueError, TypeError)):
         simulate_fleet(tables, [_wl(0)] * 2, FabricConfig(slice_bytes=4_000),
                        SLICES, failures=[fm, None])
+
+
+def test_fleet_telemetry_parity():
+    """Telemetry counters ride the scenario axis unchanged: each fleet
+    member's per-slice counter rows equal its solo run bit for bit, and
+    conservation holds per scenario (ISSUE 8)."""
+    sched = round_robin(N, 1)
+    tables = FabricTables.build(sched, ucmp(sched))
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    tele = TelemetryConfig()
+    wls = [_wl(s) for s in range(4)]
+    fms = [compile_masks(random_trace(s, sched, SLICES, n_events=3), sched,
+                         SLICES) for s in range(4)]
+    gots = simulate_fleet(tables, wls, cfg, SLICES, failures=fms,
+                          telemetry=tele)
+    for i, (wl, got) in enumerate(zip(wls, gots)):
+        ref = simulate(tables, wl, cfg, SLICES, failures=fms[i],
+                       telemetry=tele)
+        _assert_results_equal(got, ref, f"seed {i}: ")
+        assert toolkit.check_telemetry(got, wl, SLICES) == []
 
 
 def test_reconfigure_fleet_seed_sweep_bit_identical():

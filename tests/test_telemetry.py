@@ -1,0 +1,344 @@
+"""Telemetry & incremental-state suite (ISSUE 8).
+
+The load-bearing properties:
+
+* **conservation** — with telemetry on, the device-accumulated counters
+  survive the host replay of :func:`repro.core.toolkit.check_telemetry`
+  across all 8 routing schemes × push-back × failure masks × control
+  faults (injected == delivered + in-flight + dropped, per ToR and
+  globally, plus exact delivered-row and latency-histogram replays);
+* **zero-cost off switch** — ``telemetry=None`` traces the pre-telemetry
+  program, so every non-telemetry output field is bit-identical with the
+  counters on vs. off (the goldens themselves run with the default);
+* **incremental == one-shot** — a run split across any
+  ``init_state / step_slices / finalize`` window boundaries (masks sliced
+  per window) reproduces the one-shot :func:`simulate` field for field,
+  counters included, and mid-run :func:`ingest` of future-timed demand
+  matches the one-shot union run;
+* the ``OpenOpticsNet`` clocked service (``ingest / advance / snapshot``)
+  is a thin shell over that API and its frames account for every packet.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (FabricConfig, FabricTables, ReconfigConfig,
+                        TelemetryConfig, TelemetryCounters, OpenOpticsNet,
+                        compile_control, compile_masks, direct, vlb, opera,
+                        ucmp, hoho, ecmp, wcmp, ksp, random_control_trace,
+                        random_trace, reconfigure, round_robin, simulate,
+                        simulate_incremental, synthesize, toolkit,
+                        init_state, ingest, step_slices, finalize)
+from repro.core.fabric import Workload
+from repro.core.telemetry import TELE_KEYS, counters_from_out
+
+N = 8
+SLICES = 48
+SCHEMES = [direct, vlb, opera, ucmp, hoho, ecmp, wcmp, ksp]
+
+
+def _workload(seed=11, **kw):
+    base = dict(slice_bytes=4_000, load=0.9, max_packets=420, seed=seed)
+    base.update(kw)
+    return synthesize("rpc", N, 24, **base)
+
+
+def _tables(alg=ucmp):
+    sched = round_robin(N, 1)
+    return sched, FabricTables.build(sched, alg(sched))
+
+
+def _masks(sched, seed=5):
+    fails = compile_masks(random_trace(seed, sched, SLICES), sched, SLICES)
+    ctrl = compile_control(random_control_trace(seed + 2, N, SLICES),
+                           SLICES, N)
+    return fails, ctrl
+
+
+def _assert_equal(a, b, where=""):
+    for f in dataclasses.fields(a):
+        if f.name == "telemetry":
+            ta, tb = a.telemetry, b.telemetry
+            assert (ta is None) == (tb is None), f"{where}telemetry presence"
+            if ta is None:
+                continue
+            assert ta.lat_edges == tb.lat_edges
+            for tf in dataclasses.fields(ta):
+                if tf.name == "lat_edges":
+                    continue
+                np.testing.assert_array_equal(
+                    getattr(ta, tf.name), getattr(tb, tf.name),
+                    err_msg=f"{where}telemetry.{tf.name}")
+            continue
+        np.testing.assert_array_equal(getattr(a, f.name), getattr(b, f.name),
+                                      err_msg=f"{where}{f.name}")
+
+
+# ---------------------------------------------------------------------------
+# conservation: 8 schemes x push-back x failures x control
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg", SCHEMES, ids=lambda a: a.__name__)
+@pytest.mark.parametrize("pushback", [False, True], ids=["plain", "pushback"])
+def test_conservation_all_schemes(alg, pushback):
+    sched, tables = _tables(alg)
+    fails, ctrl = _masks(sched)
+    wl = _workload()
+    tele = TelemetryConfig()
+    for f, c in ((None, None), (fails, None), (None, ctrl), (fails, ctrl)):
+        cfg = FabricConfig(slice_bytes=4_000, cc_detect=True,
+                           pushback=pushback)
+        res = simulate(tables, wl, cfg, SLICES, failures=f, control=c,
+                       telemetry=tele)
+        tag = f"{alg.__name__} fail={f is not None} ctrl={c is not None}"
+        assert toolkit.check_telemetry(res, wl, SLICES) == [], tag
+
+
+def test_counter_semantics_pinned():
+    """A few directly-computable facts, pinned without the checker: row
+    sums equal the headline series, capacity rows reflect the granted
+    schedule, and the histogram counts every delivered packet once."""
+    sched, tables = _tables(ucmp)
+    wl = _workload()
+    res = simulate(tables, wl, FabricConfig(slice_bytes=4_000), SLICES,
+                   telemetry=TelemetryConfig(lat_edges=(2, 8)))
+    t = res.telemetry
+    assert isinstance(t, TelemetryCounters)
+    assert t.num_slices == SLICES and t.num_nodes == N
+    np.testing.assert_array_equal(t.delivered_bytes.sum(1),
+                                  res.delivered_bytes)
+    # round_robin grants every ToR one circuit of slice_bytes per slice
+    assert (t.util_cap == 4_000).all()
+    assert (t.util_used <= t.util_cap).all()
+    delivered_in_run = ((res.t_deliver >= 0)
+                        & (res.t_deliver < SLICES)).sum()
+    assert t.lat_hist.sum() == delivered_in_run
+    assert t.lat_hist.shape == (SLICES, 3)
+
+
+def test_telemetry_none_bit_identity():
+    """telemetry=None and telemetry=on agree on every non-counter field —
+    the counters observe the run, never steer it."""
+    sched, tables = _tables(hoho)
+    fails, ctrl = _masks(sched)
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    wl = _workload()
+    off = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl)
+    on = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl,
+                  telemetry=TelemetryConfig())
+    assert off.telemetry is None and on.telemetry is not None
+    for f in dataclasses.fields(off):
+        if f.name == "telemetry":
+            continue
+        np.testing.assert_array_equal(getattr(off, f.name),
+                                      getattr(on, f.name), err_msg=f.name)
+
+
+# ---------------------------------------------------------------------------
+# incremental == one-shot
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("window", [1, 5, 7, None],
+                         ids=["w1", "w5", "w7", "one-window"])
+def test_incremental_matches_one_shot(window):
+    sched, tables = _tables(ucmp)
+    fails, ctrl = _masks(sched, seed=9)
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    wl = _workload()
+    tele = TelemetryConfig()
+    ref = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl,
+                   telemetry=tele)
+    got = simulate_incremental(tables, wl, cfg, SLICES, window=window,
+                               failures=fails, control=ctrl, telemetry=tele)
+    _assert_equal(ref, got, f"window={window}: ")
+
+
+def test_incremental_matches_one_shot_no_telemetry():
+    sched, tables = _tables(hoho)
+    cfg = FabricConfig(slice_bytes=4_000)
+    wl = _workload()
+    ref = simulate(tables, wl, cfg, SLICES)
+    got = simulate_incremental(tables, wl, cfg, SLICES, window=6)
+    _assert_equal(ref, got)
+
+
+def test_mid_run_ingest_matches_union():
+    """Demand ingested before its first inject slice is indistinguishable
+    from having been there from slice 0 (same packet order)."""
+    sched, tables = _tables(ucmp)
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=True)
+    wl = _workload()
+    tele = TelemetryConfig()
+    fields = {f.name: getattr(wl, f.name) for f in dataclasses.fields(wl)}
+    early = wl.t_inject < 12
+    a = Workload(**{k: v[early] for k, v in fields.items()})
+    b = Workload(**{k: v[~early] for k, v in fields.items()})
+    union = Workload(**{k: np.concatenate([v[early], v[~early]])
+                        for k, v in fields.items()})
+    ref = simulate(tables, union, cfg, SLICES, telemetry=tele)
+    fs = init_state(tables, a, cfg, tele)
+    step_slices(fs, 12)
+    ingest(fs, b)
+    step_slices(fs, SLICES - 12)
+    _assert_equal(ref, finalize(fs))
+
+
+def test_finalize_is_a_checkpoint():
+    """finalize may be called mid-run and again later — the state stays
+    live and the counter rows accumulate across the calls."""
+    sched, tables = _tables(ucmp)
+    fs = init_state(tables, _workload(), FabricConfig(slice_bytes=4_000),
+                    TelemetryConfig())
+    step_slices(fs, 10)
+    mid = finalize(fs)
+    assert mid.telemetry.num_slices == 10
+    step_slices(fs, 10)
+    end = finalize(fs)
+    assert end.telemetry.num_slices == 20
+    np.testing.assert_array_equal(end.telemetry.injected_bytes[:10],
+                                  mid.telemetry.injected_bytes)
+
+
+def test_incremental_empty_start_and_validation():
+    sched, tables = _tables(ucmp)
+    cfg = FabricConfig(slice_bytes=4_000)
+    fs = init_state(tables, None, cfg, TelemetryConfig())
+    res = finalize(fs)                       # zero windows, zero packets
+    assert res.t_deliver.size == 0
+    assert res.telemetry.injected_bytes.shape == (0, N)
+    with pytest.raises(ValueError, match="window"):
+        simulate_incremental(tables, _workload(), cfg, SLICES, window=0)
+
+
+# ---------------------------------------------------------------------------
+# reconfigure + counters
+# ---------------------------------------------------------------------------
+
+
+def test_reconfigure_telemetry_frames():
+    sched = round_robin(N, 1)
+    wl = _workload()
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True)
+    rcfg = ReconfigConfig(epoch_slices=16, num_epochs=3, k_hot=2,
+                          scheme="hoho")
+    S = rcfg.epoch_slices * rcfg.num_epochs
+    off = reconfigure(sched, wl, cfg, rcfg)
+    on = reconfigure(sched, wl, cfg, rcfg, telemetry=TelemetryConfig())
+    assert off.telemetry is None
+    for f in dataclasses.fields(off):
+        if f.name == "telemetry":
+            continue
+        np.testing.assert_array_equal(getattr(off, f.name),
+                                      getattr(on, f.name), err_msg=f.name)
+    assert on.telemetry.num_slices == S
+    assert toolkit.check_telemetry(on, wl, S) == []
+
+
+# ---------------------------------------------------------------------------
+# the clocked service
+# ---------------------------------------------------------------------------
+
+
+def test_net_service_ingest_advance_snapshot():
+    sched = round_robin(N, 1)
+    net = OpenOpticsNet(dict(node="rack", node_num=N, uplink=1,
+                             slice_us=100.0, telemetry={}))
+    net.deploy_topo(sched)
+    net.deploy_routing(ucmp(sched))
+    empty = net.snapshot()
+    assert empty["packets"]["total"] == 0 and empty["counters"] is None
+    wl = _workload(load=0.6, max_packets=240, seed=3)
+    net.ingest(wl)
+    net.advance(16)
+    net.inject_failure("link", node=0, dst=1)
+    net.advance(16)
+    net.heal()
+    net.advance(16)
+    frame = net.snapshot()
+    assert frame["clock"] == SLICES
+    pk = frame["packets"]
+    assert pk["total"] == wl.num_packets
+    assert (pk["pending"] + pk["in_flight"] + pk["delivered"]
+            + pk["dropped"]) == pk["total"]
+    by = frame["bytes"]
+    assert by["total"] == int(wl.size.sum())
+    c = frame["counters"]
+    assert c["injected_bytes"].shape == (N,)
+    assert c["lat_hist"].sum() == pk["delivered"]
+    assert c["lat_edges"] == TelemetryConfig().lat_edges
+    res = net.service_result()
+    assert toolkit.check_telemetry(res, None, SLICES) == []
+
+
+def test_net_service_flow_offset_and_relative_time():
+    """Each ingest's demand is relative: t_inject shifts by the clock and
+    flow ids are offset past earlier batches, so two identical batches
+    never collide on sequence tracking."""
+    sched = round_robin(N, 1)
+    net = OpenOpticsNet(dict(node="rack", node_num=N, uplink=1))
+    net.deploy_topo(sched)
+    net.deploy_routing(ucmp(sched))
+    wl = _workload(load=0.5, max_packets=100, seed=7)
+    net.ingest(wl)
+    net.advance(30)
+    net.ingest(wl)                           # same batch again, shifted
+    net.advance(30)
+    fs = net._service
+    assert int(np.asarray(fs.j["t_inject"])[wl.num_packets:].min()) >= 30
+    flows = np.asarray(fs.j["flow"])
+    assert flows[wl.num_packets:].min() > flows[:wl.num_packets].max()
+    frame = net.snapshot()
+    assert frame["packets"]["total"] == 2 * wl.num_packets
+    assert frame["counters"] is None         # net built without telemetry
+
+
+def test_net_service_requires_deploy():
+    net = OpenOpticsNet(dict(node="rack", node_num=N))
+    with pytest.raises(RuntimeError, match="deploy"):
+        net.advance(4)
+    sched = round_robin(N, 1)
+    net.deploy_topo(sched)
+    net.deploy_routing(ucmp(sched))
+    with pytest.raises(ValueError, match="positive"):
+        net.advance(0)
+
+
+# ---------------------------------------------------------------------------
+# config plumbing / error paths
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_config_validation():
+    assert TelemetryConfig((1, 2, 3)).num_buckets == 4
+    for bad in ((), (3, 2), (1, 1), (-1, 2)):
+        with pytest.raises(ValueError, match="lat_edges"):
+            TelemetryConfig(bad)
+
+
+def test_check_telemetry_error_paths():
+    sched, tables = _tables(ucmp)
+    wl = _workload()
+    res = simulate(tables, wl, FabricConfig(slice_bytes=4_000), SLICES)
+    assert res.telemetry is None
+    assert toolkit.check_telemetry(res, wl, SLICES) != []   # no counters
+    on = simulate(tables, wl, FabricConfig(slice_bytes=4_000), SLICES,
+                  telemetry=TelemetryConfig())
+    # a corrupted counter row must be flagged
+    bad = dataclasses.replace(on, telemetry=dataclasses.replace(
+        on.telemetry,
+        delivered_bytes=on.telemetry.delivered_bytes + np.int32(1)))
+    assert toolkit.check_telemetry(bad, wl, SLICES) != []
+
+
+def test_counters_from_out_pops_rows():
+    out = {k: np.zeros((4, N), np.int32) for k in TELE_KEYS}
+    out["tele_lat_hist"] = np.zeros((4, 8), np.int32)
+    out["other"] = np.arange(3)
+    assert counters_from_out(dict(out), None) is None
+    got = counters_from_out(out, TelemetryConfig())
+    assert isinstance(got, TelemetryCounters)
+    assert list(out) == ["other"]            # tele rows popped
+    assert got.lat_hist.shape == (4, 8)

@@ -1,0 +1,85 @@
+"""Property-based telemetry sweep (hypothesis): random workloads x random
+mechanism configs x random fault traces — conservation always holds and
+the incremental replay is always bit-identical.
+
+The two acceptance properties of the ISSUE-8 counter layer:
+
+* :func:`repro.core.toolkit.check_telemetry` returns no violations for any
+  simulated run with telemetry on (injected == delivered + in-flight +
+  dropped per ToR, exact delivered-row / latency-histogram host replays);
+* :func:`repro.core.fabric.simulate_incremental` at a random window size
+  reproduces the one-shot run field for field, counters included.
+
+The deterministic subset lives in ``test_telemetry.py``; in CI this module
+always runs (``tests/conftest.py`` hard-errors there when hypothesis is
+missing).
+"""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FabricConfig, FabricTables, TelemetryConfig,
+                        compile_control, compile_masks, random_control_trace,
+                        random_trace, round_robin, simulate,
+                        simulate_incremental, synthesize, toolkit, ucmp,
+                        hoho, vlb, opera)
+
+N = 8
+SLICES = 36
+ALGS = {"ucmp": ucmp, "hoho": hoho, "vlb": vlb, "opera": opera}
+
+
+def _setup(scheme, seed, load, pushback, with_fail, with_ctrl):
+    sched = round_robin(N, 1)
+    tables = FabricTables.build(sched, ALGS[scheme](sched))
+    wl = synthesize("rpc", N, 18, slice_bytes=4_000, load=load,
+                    max_packets=300, seed=seed)
+    cfg = FabricConfig(slice_bytes=4_000, cc_detect=True, pushback=pushback)
+    fails = compile_masks(random_trace(seed, sched, SLICES), sched,
+                          SLICES) if with_fail else None
+    ctrl = compile_control(random_control_trace(seed + 1, N, SLICES),
+                           SLICES, N) if with_ctrl else None
+    return tables, wl, cfg, fails, ctrl
+
+
+@settings(max_examples=12, deadline=None)
+@given(scheme=st.sampled_from(sorted(ALGS)), seed=st.integers(0, 2**16),
+       load=st.floats(0.2, 1.1), pushback=st.booleans(),
+       with_fail=st.booleans(), with_ctrl=st.booleans(),
+       edges=st.sampled_from([(1, 2, 4, 8, 16, 32, 64), (4,), (2, 10, 30)]))
+def test_conservation_random_runs(scheme, seed, load, pushback, with_fail,
+                                  with_ctrl, edges):
+    tables, wl, cfg, fails, ctrl = _setup(scheme, seed, load, pushback,
+                                          with_fail, with_ctrl)
+    res = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl,
+                   telemetry=TelemetryConfig(edges))
+    assert toolkit.check_telemetry(res, wl, SLICES) == []
+
+
+@settings(max_examples=8, deadline=None)
+@given(scheme=st.sampled_from(sorted(ALGS)), seed=st.integers(0, 2**16),
+       load=st.floats(0.2, 1.0), pushback=st.booleans(),
+       with_fail=st.booleans(), with_ctrl=st.booleans(),
+       window=st.integers(1, SLICES))
+def test_incremental_parity_random_windows(scheme, seed, load, pushback,
+                                           with_fail, with_ctrl, window):
+    tables, wl, cfg, fails, ctrl = _setup(scheme, seed, load, pushback,
+                                          with_fail, with_ctrl)
+    tele = TelemetryConfig()
+    ref = simulate(tables, wl, cfg, SLICES, failures=fails, control=ctrl,
+                   telemetry=tele)
+    got = simulate_incremental(tables, wl, cfg, SLICES, window=window,
+                               failures=fails, control=ctrl, telemetry=tele)
+    for f in dataclasses.fields(ref):
+        if f.name == "telemetry":
+            for tf in dataclasses.fields(ref.telemetry):
+                if tf.name == "lat_edges":
+                    continue
+                np.testing.assert_array_equal(
+                    getattr(ref.telemetry, tf.name),
+                    getattr(got.telemetry, tf.name),
+                    err_msg=f"telemetry.{tf.name}")
+            continue
+        np.testing.assert_array_equal(getattr(ref, f.name),
+                                      getattr(got, f.name), err_msg=f.name)
